@@ -1,0 +1,40 @@
+"""Paper Fig. 3 analogue: total simulation vs optimized-mover time.
+
+The paper reports hybrid (MPI+OpenMP/OpenACC) total and mover-only time at
+2 and 16 ranks. Here: total PIC step vs mover-only per strategy at the
+laptop-scale BIT1 configuration (ionization test, field solve off — the
+paper's own scenario)."""
+
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import row, time_fn
+from repro.configs.pic_bit1 import make_bench_config
+from repro.core import pic
+from repro.core.mover import push
+
+
+def main() -> list[str]:
+    rows = []
+    for strategy in ("unified", "async_batched"):
+        cfg = make_bench_config(nc=4096, n=131_072, strategy=strategy)
+        state = pic.init_state(cfg, 0)
+        step = pic.make_step(cfg)
+        us_total = time_fn(lambda s: step(s)[0].species[0].x, state)
+
+        grid = cfg.grid
+        buf = state.species[0]
+        import jax.numpy as jnp
+        e = jnp.zeros((grid.ng,), jnp.float32)
+        mover_only = jax.jit(lambda b, s=strategy: push(
+            b, e, grid, -1.0, cfg.dt, strategy=s, boundary="periodic")[0].x)
+        us_mover = time_fn(mover_only, buf)
+        rows.append(row(f"total_step/{strategy}", us_total,
+                        f"mover_frac={us_mover * 3 / us_total:.2f}"))
+        rows.append(row(f"mover_only/{strategy}", us_mover, ""))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -1,0 +1,42 @@
+"""Paper §3.3 physics benchmark: MC ionization throughput.
+
+The paper's test case is dominated by the mover + ionization Monte Carlo;
+this measures the collision stage alone (events/s and particles/s) and a
+full 10-step run of the scaled scenario."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, time_fn
+from repro.configs.pic_bit1 import make_bench_config
+from repro.core import collisions, pic
+from repro.core.grid import Grid1D, deposit_density
+
+
+def main() -> list[str]:
+    cfg = make_bench_config(nc=4096, n=131_072)
+    state = pic.init_state(cfg, 0)
+    grid = cfg.grid
+    neutrals, electrons, ions = (state.species[2], state.species[0],
+                                 state.species[1])
+    params = collisions.IonizationParams(rate=cfg.ionization_rate,
+                                         vth_electron=1.0)
+    key = jax.random.PRNGKey(3)
+
+    ion_fn = jax.jit(lambda k, n, e, i: collisions.ionize(
+        k, n, e, i, grid, params, cfg.dt)[0].x)
+    us = time_fn(ion_fn, key, neutrals, electrons, ions)
+    rows = [row("ionize/step", us,
+                f"{neutrals.capacity / us:.1f}Mcandidates_per_s")]
+
+    step = pic.make_step(cfg)
+    us = time_fn(lambda s: step(s)[0].species[0].x, state)
+    rows.append(row("bit1_scenario/full_step", us,
+                    f"{3 * 131072 / us:.1f}Mparticles_per_s"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

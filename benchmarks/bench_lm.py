@@ -1,0 +1,50 @@
+"""LM substrate benchmark: train/decode throughput of the smoke configs.
+
+Not a paper figure — this covers the assigned-architecture substrate so
+the roofline's CPU-measured reference point exists for §Perf."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, time_fn
+from repro.configs import get_smoke_config
+from repro.data.pipeline import DataConfig, synthetic_batch
+from repro.models.registry import build
+from repro.train import optimizer as opt
+from repro.train.train_step import TrainConfig, make_train_step
+
+ARCHS = ("qwen2-0.5b", "mamba2-2.7b", "llama4-maverick-400b-a17b")
+
+
+def main() -> list[str]:
+    rows = []
+    for arch in ARCHS:
+        cfg = get_smoke_config(arch)
+        m = build(cfg)
+        params = m.init_params(jax.random.PRNGKey(0))
+        tcfg = TrainConfig(opt=opt.OptConfig(lr=1e-3), loss_chunk=64,
+                           remat=False)
+        dcfg = DataConfig(global_batch=4, seq_len=128)
+        step = jax.jit(make_train_step(cfg, tcfg))
+        state = opt.init(params, tcfg.opt)
+        batch = synthetic_batch(dcfg, cfg, 0)
+        us = time_fn(lambda p, s, b: step(p, s, b)[2]["loss"], params,
+                     state, batch)
+        toks = dcfg.global_batch * dcfg.seq_len
+        rows.append(row(f"train_smoke/{arch}", us,
+                        f"{toks / us * 1e6:.0f}tok_per_s"))
+
+        cache = m.init_cache(2, 256)
+        tok = jnp.zeros((2, 1), jnp.int32)
+        dec = jax.jit(m.decode_step)
+        us = time_fn(lambda p, t, c: dec(p, t, c,
+                                         jnp.asarray(5, jnp.int32))[0],
+                     params, tok, cache)
+        rows.append(row(f"decode_smoke/{arch}", us, ""))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

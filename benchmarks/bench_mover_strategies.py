@@ -1,0 +1,63 @@
+"""Paper Fig. 7/8 analogue: mover execution time per data-movement strategy.
+
+The paper compares OpenMP Target / OpenACC offload with explicit copies vs
+unified memory on 1-2 GPUs. Our strategies (DESIGN.md §2):
+  unified       — pure-jnp mover, XLA-managed data movement
+  explicit      — fused Pallas kernel, BlockSpec VMEM staging
+                  (interpret mode on CPU: validates, does not accelerate)
+  async_batched — scan over particle batches (the async extension)
+Also benchmarked: the deposit scatter (XLA) vs the one-hot Pallas deposit,
+and the 'onehot' MXU-style field gather vs dynamic gather.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, time_fn
+from repro.core.grid import Grid1D, deposit
+from repro.core.mover import push
+from repro.core.particles import init_uniform
+from repro.kernels import ops
+
+N = 262_144
+NC = 4_096
+
+
+def main() -> list[str]:
+    key = jax.random.PRNGKey(0)
+    grid = Grid1D(nc=NC, dx=1.0)
+    buf = init_uniform(key, N, N, grid.length, vth=1.0)
+    e = jax.random.normal(jax.random.PRNGKey(1), (grid.ng,))
+
+    rows = []
+    for strategy in ("unified", "async_batched", "explicit"):
+        fn = jax.jit(lambda b, ee, s=strategy: push(
+            b, ee, grid, -1.0, 0.1, strategy=s, boundary="periodic")[0].x)
+        us = time_fn(fn, buf, e)
+        rows.append(row(f"mover/{strategy}", us,
+                        f"{N / us:.1f}Mparticles_per_s"))
+
+    for mode in ("take", "onehot"):
+        small = Grid1D(nc=512, dx=8.0)        # onehot viable for small grids
+        fn = jax.jit(lambda b, ee, m=mode: push(
+            b, ee, small, -1.0, 0.1, strategy="unified", boundary="periodic",
+            gather_mode=m)[0].x)
+        us = time_fn(fn, buf, jax.random.normal(jax.random.PRNGKey(2),
+                                                (small.ng,)))
+        rows.append(row(f"gather/{mode}", us, ""))
+
+    dep_x = jax.jit(lambda b: deposit(grid, b, 1.0))
+    us = time_fn(dep_x, buf)
+    rows.append(row("deposit/xla_scatter", us, ""))
+    dep_k = jax.jit(lambda b: ops.deposit(b.x, b.w * b.alive, x0=0.0,
+                                          dx=grid.dx, nc=grid.nc,
+                                          ng=grid.ng))
+    us = time_fn(dep_k, buf)
+    rows.append(row("deposit/pallas_onehot", us, "interpret_mode"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

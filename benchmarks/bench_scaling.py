@@ -1,0 +1,64 @@
+"""Paper Fig. 4 analogue: mover strong scaling with domain count.
+
+The paper scales BIT1's optimized mover to 128 MPI ranks on Dardel. Here
+the domain decomposition runs on D in {1, 2, 4, 8} emulated devices in
+subprocesses (the container exposes one physical core, so this measures
+harness overhead/correctness, not parallel speedup — recorded as such in
+EXPERIMENTS.md)."""
+
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+_PROG = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%d"
+    import time
+    import jax
+    from repro.core import decomposition, pic
+    from repro.configs.pic_bit1 import make_bench_config
+    from repro.launch.mesh import make_debug_mesh
+
+    d = %d
+    mesh = make_debug_mesh(data=d, model=1)
+    cfg = make_bench_config(nc=4096, n=131072)
+    dcfg = decomposition.DomainConfig(pic=cfg, axis_names=("data",),
+                                      max_migration=8192)
+    state = decomposition.init_distributed_state(dcfg, mesh, 0)
+    step = decomposition.make_distributed_step(dcfg, mesh)
+    state, _ = step(state)   # compile + warmup
+    jax.block_until_ready(state.species[0].x)
+    t0 = time.perf_counter()
+    iters = 5
+    for _ in range(iters):
+        state, diag = step(state)
+    jax.block_until_ready(state.species[0].x)
+    us = (time.perf_counter() - t0) / iters * 1e6
+    print("RESULT %%0.1f" %% us)
+""")
+
+
+def main() -> list[str]:
+    rows = []
+    for d in (1, 2, 4, 8):
+        env = dict(os.environ)
+        env["PYTHONPATH"] = SRC
+        out = subprocess.run([sys.executable, "-c", _PROG % (d, d)],
+                             env=env, capture_output=True, text=True,
+                             timeout=900)
+        us = "NaN"
+        for line in out.stdout.splitlines():
+            if line.startswith("RESULT"):
+                us = line.split()[1]
+        rows.append(f"distributed_step/domains={d},{us},"
+                    f"1core_container")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

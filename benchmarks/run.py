@@ -1,0 +1,42 @@
+"""Benchmark runner: one module per paper table/figure. CSV to stdout.
+
+  bench_hybrid_total     — Fig. 3 (total vs mover, per strategy)
+  bench_scaling          — Fig. 4 (mover scaling with domain count)
+  bench_mover_strategies — Fig. 7/8 (data-movement strategies) + Fig. 5/6
+                           (explicit vs unified traffic proxies)
+  bench_ionization       — §3.3 physics scenario throughput
+  bench_lm               — assigned-architecture substrate reference
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_hybrid_total, bench_ionization, bench_lm,
+                            bench_mover_strategies, bench_scaling)
+    modules = [
+        ("fig3_hybrid_total", bench_hybrid_total),
+        ("fig4_scaling", bench_scaling),
+        ("fig7_8_strategies", bench_mover_strategies),
+        ("sec3_ionization", bench_ionization),
+        ("lm_substrate", bench_lm),
+    ]
+    print("name,us_per_call,derived")
+    failed = False
+    for tag, mod in modules:
+        try:
+            for r in mod.main():
+                print(f"{tag}/{r}", flush=True)
+        except Exception:
+            failed = True
+            print(f"{tag}/ERROR,,", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Serving example: batched greedy decoding against a KV cache.
+
+Builds an assigned arch at its reduced config, prefills a prompt, then
+decodes tokens step by step (the same serve_step the decode_* dry-run
+cells lower at production shapes).
+
+    PYTHONPATH=src python examples/serve_lm.py --arch qwen2-0.5b --tokens 32
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, get_smoke_config
+from repro.models.registry import build
+from repro.train.serve_step import make_serve_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b", choices=list(ARCHS))
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--tokens", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    model = build(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    s_max = args.prompt_len + args.tokens + 1
+    cache = model.init_cache(args.batch, s_max)
+    if cfg.kind == "encdec":
+        from repro.models import whisper
+        frames = 0.1 * jax.random.normal(
+            jax.random.PRNGKey(2), (args.batch, cfg.enc_seq, cfg.d_model))
+        cache = whisper.prefill_cross(cfg, params, cache, frames)
+
+    serve = jax.jit(make_serve_step(cfg))
+    prompt = jax.random.randint(jax.random.PRNGKey(1),
+                                (args.batch, args.prompt_len), 0, cfg.vocab)
+
+    # prefill via decode steps (teacher-forcing the prompt)
+    tok = prompt[:, :1]
+    for t in range(args.prompt_len):
+        nxt, cache = serve(params, prompt[:, t:t + 1],
+                           cache, jnp.asarray(t, jnp.int32))
+    generated = [nxt]
+
+    t0 = time.perf_counter()
+    for t in range(args.prompt_len, args.prompt_len + args.tokens - 1):
+        nxt, cache = serve(params, generated[-1], cache,
+                           jnp.asarray(t, jnp.int32))
+        generated.append(nxt)
+    jax.block_until_ready(generated[-1])
+    wall = time.perf_counter() - t0
+
+    out = jnp.concatenate(generated, axis=1)
+    print(f"arch={args.arch} generated {out.shape[1]} tokens x "
+          f"batch {args.batch} in {wall:.2f}s "
+          f"({args.batch * out.shape[1] / wall:.1f} tok/s)")
+    print("first row:", out[0, :16].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,130 @@
+"""Checkpointing: async writes, atomic manifests, reshard-on-restore.
+
+Layout: <dir>/step_<N>/arrays.npz + manifest.json. The manifest is written
+LAST (atomic rename), so a crash mid-write never yields a "latest" pointer
+to a torn checkpoint — restart scans for the newest complete step.
+
+Async: serialization happens on a writer thread after the arrays are
+fetched to host (device_get is the only sync point, as in production async
+checkpointing); training continues during the file write.
+
+Reshard-on-restore: arrays are stored replicated-logical; ``restore`` lays
+them out with whatever NamedShardings the *current* mesh dictates — this is
+the elastic-scaling path (runtime/elastic.py) and the hot-spare recovery
+path (DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import threading
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+SEP = "/"
+
+
+def _flatten(tree: Any) -> dict[str, np.ndarray]:
+    flat = {}
+
+    def walk(path, node):
+        if isinstance(node, dict):
+            for k, v in node.items():
+                walk(path + (str(k),), v)
+        else:
+            arr = np.asarray(node)
+            if arr.dtype.kind == "V" or str(arr.dtype) == "bfloat16":
+                # npz cannot round-trip ml_dtypes (bf16 et al.): store f32,
+                # restore() casts back through `like`
+                arr = np.asarray(node, dtype=np.float32)
+            flat[SEP.join(path)] = arr
+
+    walk((), tree)
+    return flat
+
+
+def _unflatten(flat: dict[str, np.ndarray]) -> Any:
+    tree: dict = {}
+    for key, val in flat.items():
+        parts = key.split(SEP)
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+    return tree
+
+
+class Checkpointer:
+    def __init__(self, directory: str):
+        self.dir = directory
+        os.makedirs(directory, exist_ok=True)
+        self._thread: threading.Thread | None = None
+
+    # ------------------------------------------------------------- save
+    def save(self, step: int, tree: Any, blocking: bool = False) -> None:
+        """Fetch to host synchronously, write asynchronously."""
+        host = {k: np.asarray(v) for k, v in _flatten(tree).items()}
+        self.wait()                      # one outstanding write at a time
+
+        def write():
+            path = os.path.join(self.dir, f"step_{step:08d}")
+            os.makedirs(path, exist_ok=True)
+            np.savez(os.path.join(path, "arrays.npz"), **host)
+            manifest = {"step": step, "keys": sorted(host),
+                        "complete": True}
+            tmp = os.path.join(path, "manifest.tmp")
+            with open(tmp, "w") as f:
+                json.dump(manifest, f)
+            os.replace(tmp, os.path.join(path, "manifest.json"))
+
+        if blocking:
+            write()
+        else:
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    # ---------------------------------------------------------- restore
+    def latest_step(self) -> int | None:
+        steps = []
+        for name in os.listdir(self.dir):
+            mpath = os.path.join(self.dir, name, "manifest.json")
+            if name.startswith("step_") and os.path.exists(mpath):
+                with open(mpath) as f:
+                    m = json.load(f)
+                if m.get("complete"):
+                    steps.append(m["step"])
+        return max(steps) if steps else None
+
+    def restore(self, step: int | None = None, shardings: Any = None,
+                like: Any = None) -> tuple[int, Any]:
+        """Load a checkpoint; lay arrays out per `shardings` (same tree
+        structure) if given, else as host numpy converted to jax arrays.
+        `like` (optional pytree) restores dtypes (e.g. bf16 params)."""
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                raise FileNotFoundError(f"no complete checkpoint in {self.dir}")
+        path = os.path.join(self.dir, f"step_{step:08d}", "arrays.npz")
+        with np.load(path) as z:
+            flat = {k: z[k] for k in z.files}
+        tree = _unflatten(flat)
+        if like is not None:
+            tree = jax.tree.map(
+                lambda ref, arr: np.asarray(arr).astype(ref.dtype), like,
+                tree)
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda arr, sh: jax.device_put(jnp.asarray(arr), sh), tree,
+                shardings)
+        else:
+            tree = jax.tree.map(jnp.asarray, tree)
+        return step, tree

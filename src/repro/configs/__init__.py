@@ -1,0 +1,35 @@
+"""Config registry: one module per assigned architecture (+ the paper's PIC).
+
+``get_config(arch)`` / ``get_smoke_config(arch)`` look up by the assignment's
+arch id (e.g. "qwen2-0.5b"). Modules are named with underscores.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+ARCHS = (
+    "llama4-maverick-400b-a17b",
+    "dbrx-132b",
+    "qwen2-0.5b",
+    "gemma-7b",
+    "qwen2-7b",
+    "qwen2.5-3b",
+    "recurrentgemma-2b",
+    "whisper-base",
+    "internvl2-26b",
+    "mamba2-2.7b",
+)
+
+_MODULES = {a: "repro.configs." + a.replace("-", "_").replace(".", "_")
+            for a in ARCHS}
+
+
+def get_config(arch: str):
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(_MODULES[arch]).CONFIG
+
+
+def get_smoke_config(arch: str):
+    return importlib.import_module(_MODULES[arch]).SMOKE

@@ -1,0 +1,60 @@
+"""The paper's own benchmark configuration (§3.3), BIT1 ionization test.
+
+Scenario: unbounded unmagnetized plasma of (e-, D+, D); electron-impact
+ionization depletes neutrals, dn/dt = -n n_e R. One-dimensional grid of
+~100K cells, three species, ~10M macro-particles per species (30M total),
+1K time steps, field solver and smoother DISABLED (exactly the paper's
+test); mover + MC ionization dominate — which is why the paper optimizes
+the mover.
+
+Grid/population sizes here are rounded to powers of two so they divide both
+production meshes (16 and 32 domains); per-domain buffers get 1.6x headroom
+over the initial load for ionization-born electrons/ions.
+"""
+
+from __future__ import annotations
+
+from repro.core import pic
+
+NC_GLOBAL = 102_400            # ~100K cells
+N_PER_SPECIES = 10_485_760     # ~10M macro-particles (x3 species = ~30M)
+CAPACITY = 16_777_216          # 16Mi slots: 1.6x headroom, divides 16 & 32
+
+
+def make_config(scale: int = 1, *, mover_strategy: str = "unified",
+                boundary: str = "periodic") -> pic.PICConfig:
+    """`scale` only asserts divisibility; sizes are global (the
+    decomposition divides them by the domain count)."""
+    assert NC_GLOBAL % max(scale, 1) == 0
+    # weight 1.0 everywhere: the paper's test runs without the field solve,
+    # so macro-weights only set the MC collision rates (n_e in P_ionize)
+    species = (
+        pic.SpeciesConfig("e", -1.0, 1.0, CAPACITY, N_PER_SPECIES, vth=1.0),
+        pic.SpeciesConfig("D+", 1.0, 3672.0, CAPACITY, N_PER_SPECIES,
+                          vth=0.016),
+        pic.SpeciesConfig("D", 0.0, 3672.0, CAPACITY, N_PER_SPECIES,
+                          vth=0.016),
+    )
+    return pic.PICConfig(
+        nc=NC_GLOBAL, dx=1.0, dt=0.2, species=species,
+        field_solve=False,                  # the paper's test disables it
+        boundary=boundary,
+        strategy=mover_strategy,
+        ionization=(2, 0, 1), ionization_rate=1e-4, ionization_vth_e=1.0,
+    )
+
+
+def make_bench_config(nc: int = 4096, n: int = 262_144,
+                      strategy: str = "unified") -> pic.PICConfig:
+    """Laptop-scale version for the CPU benchmarks (same physics)."""
+    cap = 2 * n
+    species = (
+        pic.SpeciesConfig("e", -1.0, 1.0, cap, n, vth=1.0),
+        pic.SpeciesConfig("D+", 1.0, 3672.0, cap, n, vth=0.016),
+        pic.SpeciesConfig("D", 0.0, 3672.0, cap, n, vth=0.016),
+    )
+    return pic.PICConfig(
+        nc=nc, dx=1.0, dt=0.2, species=species, field_solve=False,
+        boundary="periodic", strategy=strategy,
+        ionization=(2, 0, 1), ionization_rate=1e-4, ionization_vth_e=1.0,
+    )

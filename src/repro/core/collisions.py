@@ -1,0 +1,81 @@
+"""Monte-Carlo collisions: the paper's ionization test case + elastic substrate.
+
+The paper's benchmark scenario (§3.3): unbounded unmagnetized plasma of
+(e-, D+, D); electron-impact ionization depletes neutrals as
+dn/dt = -n * n_e * R, so <n(t)> = n0 * exp(-n_e R t) for quasi-constant n_e.
+
+Per macro-neutral per step: P_ionize = 1 - exp(-n_e(x) * R * dt) with n_e
+gathered from the deposited electron density at the neutral's position.
+An ionized neutral dies and spawns an (e-, D+) pair at the same position:
+the ion inherits the neutral velocity (charge exchange of momentum), the
+electron samples a Maxwellian at the ionization temperature.
+
+Elastic e-n scattering (substrate): P = 1 - exp(-n_n R_el dt); the electron
+velocity is rotated to a uniformly random direction, preserving speed.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.grid import Grid1D, deposit_density, gather
+from repro.core.particles import SpeciesBuffer, inject, kill
+
+Array = jax.Array
+
+
+class IonizationParams(NamedTuple):
+    rate: float          # R, ionization rate coefficient
+    vth_electron: float  # thermal speed of spawned electrons
+
+
+def ionize(key: Array, neutrals: SpeciesBuffer, electrons: SpeciesBuffer,
+           ions: SpeciesBuffer, grid: Grid1D, params: IonizationParams,
+           dt: float, ne: Array | None = None,
+           ) -> tuple[SpeciesBuffer, SpeciesBuffer, SpeciesBuffer, dict]:
+    """One MC ionization step. Returns (neutrals, electrons, ions, diag)."""
+    if ne is None:
+        ne = deposit_density(grid, electrons)
+    ku, kv = jax.random.split(key)
+
+    ne_at = gather(grid, ne, neutrals.x)
+    p = 1.0 - jnp.exp(-ne_at * params.rate * dt)
+    u = jax.random.uniform(ku, neutrals.x.shape, neutrals.x.dtype)
+    hit = neutrals.alive & (u < p)
+
+    # spawn: candidates are every neutral slot; mask selects the ionized ones
+    ve = params.vth_electron * jax.random.normal(
+        kv, neutrals.v.shape, neutrals.v.dtype)
+    electrons, dropped_e = inject(electrons, neutrals.x, ve, neutrals.w, hit)
+    ions, dropped_i = inject(ions, neutrals.x, neutrals.v, neutrals.w, hit)
+    neutrals = kill(neutrals, hit)
+
+    diag = {
+        "n_ionized": jnp.sum(hit.astype(jnp.int32)),
+        "ionize_dropped": dropped_e + dropped_i,
+    }
+    return neutrals, electrons, ions, diag
+
+
+def elastic_scatter(key: Array, sp: SpeciesBuffer, target_density: Array,
+                    grid: Grid1D, rate: float, dt: float) -> SpeciesBuffer:
+    """Isotropic elastic scattering off a background density field."""
+    kp, kd = jax.random.split(key)
+    nn_at = gather(grid, target_density, sp.x)
+    p = 1.0 - jnp.exp(-nn_at * rate * dt)
+    u = jax.random.uniform(kp, sp.x.shape, sp.x.dtype)
+    hit = sp.alive & (u < p)
+
+    speed = jnp.linalg.norm(sp.v, axis=-1, keepdims=True)
+    # uniform direction on the sphere
+    k1, k2 = jax.random.split(kd)
+    cos_t = jax.random.uniform(k1, sp.x.shape, sp.x.dtype, -1.0, 1.0)
+    phi = jax.random.uniform(k2, sp.x.shape, sp.x.dtype, 0.0, 2.0 * jnp.pi)
+    sin_t = jnp.sqrt(jnp.maximum(0.0, 1.0 - cos_t * cos_t))
+    dirs = jnp.stack([cos_t, sin_t * jnp.cos(phi), sin_t * jnp.sin(phi)], -1)
+    v_new = speed * dirs
+    v = jnp.where(hit[:, None], v_new, sp.v)
+    return SpeciesBuffer(x=sp.x, v=v, w=sp.w, alive=sp.alive)

@@ -1,0 +1,28 @@
+"""Per-step diagnostics: the quantities BIT1 reports (and our tests assert)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.grid import Grid1D
+from repro.core.particles import SpeciesBuffer
+
+Array = jnp.ndarray
+
+
+def kinetic_energy(sp: SpeciesBuffer, mass: float) -> Array:
+    ke = 0.5 * mass * jnp.sum(sp.v * sp.v, axis=-1)
+    return jnp.sum(jnp.where(sp.alive, ke * sp.w, 0.0))
+
+
+def field_energy(e: Array, grid: Grid1D, eps0: float = 1.0) -> Array:
+    return 0.5 * eps0 * jnp.sum(e * e) * grid.dx
+
+
+def total_charge(sp: SpeciesBuffer, charge: float) -> Array:
+    return charge * jnp.sum(jnp.where(sp.alive, sp.w, 0.0))
+
+
+def momentum(sp: SpeciesBuffer, mass: float) -> Array:
+    return mass * jnp.sum(
+        jnp.where(sp.alive[:, None], sp.v * sp.w[:, None], 0.0), axis=0)

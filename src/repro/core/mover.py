@@ -1,0 +1,174 @@
+"""The particle mover — the paper's optimization target.
+
+BIT1 profiling [Williams et al. 2023] shows the mover dominating runtime; the
+paper parallelizes it with OpenMP tasks / OpenACC on CPU and offloads it with
+OpenMP target / OpenACC on GPU, comparing *explicit* and *unified-memory*
+data movement. The TPU/JAX mapping (DESIGN.md §2):
+
+* ``strategy='unified'``  — pure jnp push; XLA manages all HBM traffic and
+  fusion (the unified-memory analogue).
+* ``strategy='explicit'`` — fused Pallas kernel with explicit BlockSpec
+  HBM->VMEM staging and double-buffered tile pipeline (the explicit-copy
+  analogue, and the paper's "CUDA streams" overlap, which Pallas's grid
+  pipeline provides structurally).
+* ``strategy='async_batched'`` — the assigned title's *asynchronous* mode:
+  ``lax.scan`` over particle batches so migration/collective work of batch k
+  overlaps the push of batch k+1 (see ``decomposition.py`` for the
+  multi-device form).
+
+Physics: non-relativistic Boris push, 1D3V. E = (Ex(x), 0, 0) gathered from
+the node field; optional constant background B rotates the 3V velocity.
+With B = 0 this reduces to v_x += (q/m) E dt; x += v_x dt — exactly the
+loops in the paper's Listings 1.1-1.4.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.grid import Grid1D, gather, gather_onehot
+from repro.core.particles import SpeciesBuffer
+
+Array = jax.Array
+
+Strategy = Literal["unified", "explicit", "async_batched"]
+# 'open': leave positions raw — the domain-decomposed step routes crossers
+# to neighbor domains (decomposition.py) instead of wrapping/absorbing here.
+Boundary = Literal["periodic", "absorb", "open"]
+
+
+def boris_kick(v: Array, e_x: Array, qm_dt: Array | float,
+               b: tuple[float, float, float] = (0.0, 0.0, 0.0)) -> Array:
+    """Boris rotation push. v: (N, 3); e_x: (N,) field at particles."""
+    bx, by, bz = b
+    half = 0.5 * qm_dt
+    vm = v.at[:, 0].add(half * e_x)              # half electric kick
+    if bx == 0.0 and by == 0.0 and bz == 0.0:
+        vp = vm
+    else:
+        t = jnp.asarray([bx, by, bz], v.dtype) * half
+        t2 = jnp.dot(t, t)
+        s = 2.0 * t / (1.0 + t2)
+        vprime = vm + jnp.cross(vm, t[None, :])
+        vp = vm + jnp.cross(vprime, s[None, :])
+    return vp.at[:, 0].add(half * e_x)           # second half kick
+
+
+def apply_boundary(x: Array, alive: Array, length: float,
+                   boundary: Boundary) -> tuple[Array, Array, Array, Array]:
+    """Returns (x, alive, absorbed_left, absorbed_right masks)."""
+    if boundary == "open":
+        return x, alive, jnp.zeros_like(alive), jnp.zeros_like(alive)
+    if boundary == "periodic":
+        return jnp.mod(x, length), alive, jnp.zeros_like(alive), \
+            jnp.zeros_like(alive)
+    hit_l = alive & (x < 0.0)
+    hit_r = alive & (x >= length)
+    new_alive = alive & ~(hit_l | hit_r)
+    # park dead particles inside the domain so cell indices stay valid
+    xc = jnp.clip(x, 0.0, jnp.nextafter(jnp.asarray(length, x.dtype),
+                                        jnp.asarray(0.0, x.dtype)))
+    return xc, new_alive, hit_l, hit_r
+
+
+def push_unified(buf: SpeciesBuffer, e: Array, grid: Grid1D, qm: float,
+                 dt: float, b: tuple[float, float, float] = (0.0, 0.0, 0.0),
+                 boundary: Boundary = "periodic",
+                 gather_mode: str = "take") -> tuple[SpeciesBuffer, dict]:
+    """Pure-jnp mover (XLA-managed data movement — the 'unified' strategy)."""
+    g = gather_onehot if gather_mode == "onehot" else gather
+    e_x = g(grid, e, buf.x) * buf.alive
+    v = boris_kick(buf.v, e_x, qm * dt, b)
+    x = buf.x + v[:, 0] * dt
+    x, alive, hl, hr = apply_boundary(x, buf.alive, grid.length, boundary)
+    # divertor diagnostics: particle + energy flux absorbed at each wall
+    ke = 0.5 * jnp.sum(v * v, axis=-1) * buf.w
+    diag = {
+        "absorbed_left": jnp.sum(hl.astype(jnp.int32)),
+        "absorbed_right": jnp.sum(hr.astype(jnp.int32)),
+        "power_left": jnp.sum(jnp.where(hl, ke, 0.0)),
+        "power_right": jnp.sum(jnp.where(hr, ke, 0.0)),
+    }
+    out = dataclasses.replace(buf, x=x, v=v, alive=alive, w=buf.w * alive)
+    return out, diag
+
+
+def push_explicit(buf: SpeciesBuffer, e: Array, grid: Grid1D, qm: float,
+                  dt: float, b: tuple[float, float, float] = (0.0, 0.0, 0.0),
+                  boundary: Boundary = "periodic",
+                  gather_mode: str = "take") -> tuple[SpeciesBuffer, dict]:
+    """Pallas fused mover (explicit VMEM staging — the 'explicit' strategy)."""
+    from repro.kernels import ops  # local import: kernels are optional deps
+    x, v, alive, hl, hr = ops.mover_push(
+        buf.x, buf.v, buf.alive, e, x0=grid.x0, dx=grid.dx,
+        length=grid.length, qm=qm, dt=dt, b=b, boundary=boundary,
+        gather_mode=gather_mode)
+    ke = 0.5 * jnp.sum(v * v, axis=-1) * buf.w
+    diag = {
+        "absorbed_left": jnp.sum(hl.astype(jnp.int32)),
+        "absorbed_right": jnp.sum(hr.astype(jnp.int32)),
+        "power_left": jnp.sum(jnp.where(hl, ke, 0.0)),
+        "power_right": jnp.sum(jnp.where(hr, ke, 0.0)),
+    }
+    out = dataclasses.replace(buf, x=x, v=v, alive=alive, w=buf.w * alive)
+    return out, diag
+
+
+def push_async_batched(buf: SpeciesBuffer, e: Array, grid: Grid1D, qm: float,
+                       dt: float, num_batches: int = 4,
+                       b: tuple[float, float, float] = (0.0, 0.0, 0.0),
+                       boundary: Boundary = "periodic",
+                       gather_mode: str = "take"
+                       ) -> tuple[SpeciesBuffer, dict]:
+    """Batched mover: scan over particle batches (paper's async extension).
+
+    On one device this pipelines HBM traffic per batch; under shard_map the
+    per-batch migration collective of batch k overlaps batch k+1's compute
+    (XLA schedules the ppermute async against the next scan body).
+    """
+    cap = buf.capacity
+    assert cap % num_batches == 0, "capacity must divide into batches"
+    bs = cap // num_batches
+
+    def reshape(a):
+        return a.reshape((num_batches, bs) + a.shape[1:])
+
+    batched = SpeciesBuffer(x=reshape(buf.x), v=reshape(buf.v),
+                            w=reshape(buf.w), alive=reshape(buf.alive))
+
+    def body(carry, sl):
+        sbuf = SpeciesBuffer(x=sl[0], v=sl[1], w=sl[2], alive=sl[3])
+        out, diag = push_unified(sbuf, e, grid, qm, dt, b, boundary,
+                                 gather_mode)
+        acc = jax.tree.map(jnp.add, carry, diag)
+        return acc, (out.x, out.v, out.w, out.alive)
+
+    zero = {"absorbed_left": jnp.zeros((), jnp.int32),
+            "absorbed_right": jnp.zeros((), jnp.int32),
+            "power_left": jnp.zeros((), buf.x.dtype),
+            "power_right": jnp.zeros((), buf.x.dtype)}
+    diag, (x, v, w, alive) = jax.lax.scan(
+        body, zero, (batched.x, batched.v, batched.w, batched.alive))
+
+    def unshape(a):
+        return a.reshape((cap,) + a.shape[2:])
+
+    out = SpeciesBuffer(x=unshape(x), v=unshape(v), w=unshape(w),
+                        alive=unshape(alive))
+    return out, diag
+
+
+PUSH = {
+    "unified": push_unified,
+    "explicit": push_explicit,
+    "async_batched": push_async_batched,
+}
+
+
+def push(buf: SpeciesBuffer, e: Array, grid: Grid1D, qm: float, dt: float,
+         strategy: Strategy = "unified", **kw) -> tuple[SpeciesBuffer, dict]:
+    return PUSH[strategy](buf, e, grid, qm, dt, **kw)

@@ -1,0 +1,147 @@
+"""Fixed-capacity SoA particle buffers — the JAX-native form of BIT1's lists.
+
+BIT1 stores particles in per-cell linked lists; moving a particle between
+cells means unlinking/relinking, and the per-cell counts are wildly uneven
+(the source of the load imbalance the paper attacks with OpenMP tasks).
+
+Under jit we cannot have dynamic shapes, so the TPU-native equivalent is a
+dense structure-of-arrays buffer with a fixed capacity and an ``alive`` mask:
+
+* the mover grids over *uniform tiles of particles* (not cells), which removes
+  the load imbalance structurally instead of scheduling around it;
+* per-cell operations (deposition, per-cell Monte-Carlo rates) become segment
+  operations, optionally accelerated by a periodic counting sort by cell;
+* birth (injection, ionization) writes into dead slots found by a prefix-sum
+  slot allocator; death just clears the mask.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("x", "v", "w", "alive"),
+         meta_fields=())
+@dataclasses.dataclass
+class SpeciesBuffer:
+    """SoA buffer for one species. All arrays share leading dim = capacity."""
+
+    x: Array      # (cap,)   position, in [0, L)
+    v: Array      # (cap, 3) velocity (1D3V: only v[:,0] couples to E_x)
+    w: Array      # (cap,)   macro-particle weight
+    alive: Array  # (cap,)   bool mask
+
+    @property
+    def capacity(self) -> int:
+        return self.x.shape[0]
+
+    def count(self) -> Array:
+        return jnp.sum(self.alive.astype(jnp.int32))
+
+
+def make_species(capacity: int, dtype=jnp.float32) -> SpeciesBuffer:
+    """An empty (all-dead) buffer."""
+    return SpeciesBuffer(
+        x=jnp.zeros((capacity,), dtype),
+        v=jnp.zeros((capacity, 3), dtype),
+        w=jnp.zeros((capacity,), dtype),
+        alive=jnp.zeros((capacity,), bool),
+    )
+
+
+def init_uniform(key: Array, capacity: int, n: int, length: float,
+                 vth: float, drift: float = 0.0, weight: float = 1.0,
+                 dtype=jnp.float32) -> SpeciesBuffer:
+    """n live particles uniform in x, Maxwellian in v; rest of buffer dead."""
+    kx, kv = jax.random.split(key)
+    x = jax.random.uniform(kx, (capacity,), dtype, 0.0, length)
+    v = vth * jax.random.normal(kv, (capacity, 3), dtype)
+    v = v.at[:, 0].add(drift)
+    alive = jnp.arange(capacity) < n
+    w = jnp.full((capacity,), weight, dtype)
+    return SpeciesBuffer(x=x, v=v, w=w * alive, alive=alive)
+
+
+def cell_index(buf: SpeciesBuffer, dx: float, nc: int) -> Array:
+    """Cell of each particle; dead particles are parked at cell == nc."""
+    c = jnp.clip(jnp.floor(buf.x / dx).astype(jnp.int32), 0, nc - 1)
+    return jnp.where(buf.alive, c, nc)
+
+
+def counts_per_cell(buf: SpeciesBuffer, dx: float, nc: int) -> Array:
+    """np[cell] — BIT1's per-cell particle counts (its ``np[isp][j]``)."""
+    c = cell_index(buf, dx, nc)
+    return jnp.zeros((nc + 1,), jnp.int32).at[c].add(1)[:nc]
+
+
+def sort_by_cell(buf: SpeciesBuffer, dx: float, nc: int) -> SpeciesBuffer:
+    """Counting-sort-equivalent reorder: live particles grouped by cell,
+    dead particles pushed to the tail. Restores the memory locality BIT1
+    gets from per-cell lists, without the lists."""
+    key = cell_index(buf, dx, nc)  # dead -> nc sorts to the tail
+    order = jnp.argsort(key, stable=True)
+    return SpeciesBuffer(
+        x=buf.x[order], v=buf.v[order], w=buf.w[order], alive=buf.alive[order])
+
+
+def compact(buf: SpeciesBuffer) -> SpeciesBuffer:
+    """Live particles first (stable). Cheap defragmentation."""
+    order = jnp.argsort(~buf.alive, stable=True)
+    return SpeciesBuffer(
+        x=buf.x[order], v=buf.v[order], w=buf.w[order], alive=buf.alive[order])
+
+
+def free_slots(buf: SpeciesBuffer, max_n: int) -> Array:
+    """Indices of the first ``max_n`` dead slots (cap = sentinel overflow)."""
+    return jnp.nonzero(~buf.alive, size=max_n, fill_value=buf.capacity)[0]
+
+
+def inject(buf: SpeciesBuffer, x: Array, v: Array, w: Array,
+           mask: Array) -> tuple[SpeciesBuffer, Array]:
+    """Write ``mask``-selected new particles into dead slots.
+
+    x/v/w/mask have a fixed candidate length M. Returns (buffer, n_dropped):
+    candidates that find no free slot are dropped and counted — BIT1 would
+    realloc its lists; a fixed-capacity buffer surfaces the overflow instead.
+    """
+    m = x.shape[0]
+    # rank of each candidate among the selected ones
+    rank = jnp.cumsum(mask.astype(jnp.int32)) - 1
+    slots = free_slots(buf, m)                       # (m,) first m dead slots
+    dest = jnp.where(mask, slots[jnp.clip(rank, 0, m - 1)], buf.capacity)
+    ok = mask & (dest < buf.capacity)
+    dest = jnp.where(ok, dest, buf.capacity)         # scatter-drop sentinel
+    out = SpeciesBuffer(
+        x=buf.x.at[dest].set(x, mode="drop"),
+        v=buf.v.at[dest].set(v, mode="drop"),
+        w=buf.w.at[dest].set(w, mode="drop"),
+        alive=buf.alive.at[dest].set(True, mode="drop"),
+    )
+    n_dropped = jnp.sum((mask & ~ok).astype(jnp.int32))
+    return out, n_dropped
+
+
+def kill(buf: SpeciesBuffer, mask: Array) -> SpeciesBuffer:
+    """Mark ``mask`` particles dead (absorbed at wall, ionized away, ...)."""
+    alive = buf.alive & ~mask
+    return dataclasses.replace(buf, alive=alive, w=buf.w * alive)
+
+
+def take(buf: SpeciesBuffer, idx: Array) -> SpeciesBuffer:
+    """Gather a sub-buffer (used to build migration send buffers)."""
+    cap = buf.capacity
+    valid = idx < cap
+    idx_c = jnp.clip(idx, 0, cap - 1)
+    return SpeciesBuffer(
+        x=buf.x[idx_c] * valid,
+        v=buf.v[idx_c] * valid[:, None],
+        w=buf.w[idx_c] * valid,
+        alive=buf.alive[idx_c] & valid,
+    )

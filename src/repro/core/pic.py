@@ -1,0 +1,200 @@
+"""PIC cycle assembly — the Fig. 2 loop of the paper, single domain.
+
+``make_step(cfg)`` builds a jit-compiled step closing over the static config.
+The paper's benchmark configuration (``configs/pic_bit1.py``) disables the
+field-solve phase (as its §3.3 test does) and exercises mover + MC ionization
+only; the full cycle (deposit -> smooth -> Poisson -> E -> push -> collide)
+is implemented and tested regardless.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import collisions, diagnostics, fields, mover
+from repro.core.grid import Grid1D, deposit, deposit_density
+from repro.core.particles import SpeciesBuffer, init_uniform
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class SpeciesConfig:
+    name: str
+    charge: float          # in units of e
+    mass: float            # in units of m_e
+    capacity: int
+    n_init: int
+    vth: float
+    drift: float = 0.0
+    weight: float = 1.0
+    stride: int = 1        # sub-cycling: push every `stride` steps, dt*stride
+
+
+@dataclasses.dataclass(frozen=True)
+class PICConfig:
+    nc: int = 1024
+    dx: float = 1.0
+    dt: float = 0.1
+    species: Sequence[SpeciesConfig] = ()
+    field_solve: bool = True
+    smoothing_passes: int = 1
+    strategy: mover.Strategy = "unified"
+    gather_mode: str = "take"          # 'take' | 'onehot'
+    boundary: mover.Boundary = "periodic"
+    b_field: tuple[float, float, float] = (0.0, 0.0, 0.0)
+    eps0: float = 1.0
+    # ionization triple: indices into `species` (neutral, electron, ion)
+    ionization: tuple[int, int, int] | None = None
+    ionization_rate: float = 0.0
+    ionization_vth_e: float = 1.0
+    num_batches: int = 4               # for strategy='async_batched'
+    # plasma-wall interaction (boundary='absorb'): (primary, target) index
+    # pairs — absorbed primaries re-emit secondaries into target (SEE /
+    # sputtering, BIT1's signature feature)
+    wall_emission: tuple[tuple[int, int], ...] = ()
+    emission_yield: float = 0.0
+    emission_vth: float = 1.0
+
+    @property
+    def grid(self) -> Grid1D:
+        return Grid1D(nc=self.nc, dx=self.dx)
+
+    @property
+    def length(self) -> float:
+        return self.nc * self.dx
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("species", "key", "step"), meta_fields=())
+@dataclasses.dataclass
+class PICState:
+    species: tuple[SpeciesBuffer, ...]
+    key: Array
+    step: Array
+
+
+def init_state(cfg: PICConfig, seed: int = 0) -> PICState:
+    key = jax.random.PRNGKey(seed)
+    keys = jax.random.split(key, len(cfg.species) + 1)
+    bufs = tuple(
+        init_uniform(keys[i], sc.capacity, sc.n_init, cfg.length, sc.vth,
+                     sc.drift, sc.weight)
+        for i, sc in enumerate(cfg.species))
+    return PICState(species=bufs, key=keys[-1], step=jnp.zeros((), jnp.int32))
+
+
+def compute_field(cfg: PICConfig, species: tuple[SpeciesBuffer, ...]) -> Array:
+    """deposit rho -> smooth -> Poisson -> E (the field phase of the cycle)."""
+    grid = cfg.grid
+    rho = jnp.zeros((grid.ng,), jnp.float32)
+    for sc, buf in zip(cfg.species, species):
+        if sc.charge != 0.0:
+            rho = rho + deposit(grid, buf, sc.charge)
+    rho = fields.smooth_binomial(rho, cfg.smoothing_passes)
+    phi = fields.solve_poisson(rho, cfg.dx, cfg.eps0)
+    return fields.efield(phi, cfg.dx)
+
+
+def step_fn(state: PICState, cfg: PICConfig) -> tuple[PICState, dict]:
+    grid = cfg.grid
+    e = (compute_field(cfg, state.species) if cfg.field_solve
+         else jnp.zeros((grid.ng,), jnp.float32))
+
+    diag: dict = {}
+    new_species = []
+    key = state.key
+    wall_hits: dict[int, tuple] = {}
+    for si, (sc, buf) in enumerate(zip(cfg.species, state.species)):
+        qm = sc.charge / sc.mass
+        dt_s = cfg.dt * sc.stride
+        kw = dict(b=cfg.b_field, boundary=cfg.boundary)
+        if cfg.strategy == "async_batched":
+            kw["num_batches"] = cfg.num_batches
+        if cfg.strategy != "explicit":
+            kw["gather_mode"] = cfg.gather_mode
+        if cfg.boundary == "absorb" and any(p == si for p, _ in
+                                            cfg.wall_emission):
+            # capture per-slot wall masks for the SEE source below
+            pre = buf
+            pushed0, d0 = mover.push(buf, e, grid, qm, dt_s,
+                                     strategy="unified", b=cfg.b_field,
+                                     boundary="open",
+                                     gather_mode=cfg.gather_mode)
+            hl = pre.alive & (pushed0.x < 0.0)
+            hr = pre.alive & (pushed0.x >= cfg.length)
+            wall_hits[si] = (pushed0, hl, hr)
+        pushed, d = mover.push(buf, e, grid, qm, dt_s,
+                               strategy=cfg.strategy, **kw)
+        if sc.stride > 1:
+            # sub-cycling (BIT1's nstep): heavy/neutral species push every
+            # `stride` steps with dt*stride; skip otherwise
+            do_push = jnp.mod(state.step, sc.stride) == 0
+            pushed = jax.tree.map(lambda n, o: jnp.where(do_push, n, o),
+                                  pushed, buf)
+            d = jax.tree.map(lambda v: jnp.where(do_push, v, 0), d)
+        buf = pushed
+        new_species.append(buf)
+        diag.update({f"{sc.name}/{k}": v for k, v in d.items()})
+    species = tuple(new_species)
+
+    if cfg.wall_emission and cfg.boundary == "absorb":
+        from repro.core.boundaries import EmissionParams, wall_emission
+        params = EmissionParams(yield_=cfg.emission_yield,
+                                vth_emit=cfg.emission_vth)
+        lst = list(species)
+        for primary, target in cfg.wall_emission:
+            if primary not in wall_hits:
+                continue
+            key, sub = jax.random.split(key)
+            pre, hl, hr = wall_hits[primary]
+            lst[target], d = wall_emission(sub, pre, hl, hr, lst[target],
+                                           params, cfg.length)
+            diag.update({f"{cfg.species[target].name}/{k}": v
+                         for k, v in d.items()})
+        species = tuple(lst)
+
+    if cfg.ionization is not None:
+        ni, ei, ii = cfg.ionization
+        key, sub = jax.random.split(key)
+        params = collisions.IonizationParams(
+            rate=cfg.ionization_rate, vth_electron=cfg.ionization_vth_e)
+        neu, ele, ion, d = collisions.ionize(
+            sub, species[ni], species[ei], species[ii], grid, params, cfg.dt)
+        lst = list(species)
+        lst[ni], lst[ei], lst[ii] = neu, ele, ion
+        species = tuple(lst)
+        diag.update(d)
+
+    for sc, buf in zip(cfg.species, species):
+        diag[f"{sc.name}/count"] = buf.count()
+        diag[f"{sc.name}/ke"] = diagnostics.kinetic_energy(buf, sc.mass)
+    if cfg.field_solve:
+        diag["field_energy"] = diagnostics.field_energy(e, grid, cfg.eps0)
+
+    out = PICState(species=species, key=key, step=state.step + 1)
+    return out, diag
+
+
+def make_step(cfg: PICConfig):
+    """jit-compiled single step closing over the static config."""
+    return jax.jit(partial(step_fn, cfg=cfg))
+
+
+def run(cfg: PICConfig, steps: int, seed: int = 0,
+        state: PICState | None = None) -> tuple[PICState, dict]:
+    """Run `steps` steps under lax.scan; returns final state + stacked diag."""
+    if state is None:
+        state = init_state(cfg, seed)
+
+    def body(s, _):
+        s, d = step_fn(s, cfg)
+        return s, d
+
+    final, diags = jax.lax.scan(body, state, None, length=steps)
+    return final, diags

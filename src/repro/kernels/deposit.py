@@ -1,0 +1,62 @@
+"""Pallas TPU kernel: CIC charge deposition via per-tile one-hot reduction.
+
+Deposition is PIC's scatter-add hot spot. A per-lane scatter into VMEM has no
+efficient TPU lowering, so we adapt (DESIGN.md §2): each tile of 128
+particles expands its CIC weights into a dense (128, ng) one-hot-weighted
+plane and reduces over the particle axis — a pure VPU broadcast/compare/
+reduce pattern with no data-dependent addressing. The (1, ng) accumulator
+block stays resident in VMEM across all grid steps (constant index_map) and
+is initialized at step 0, so partial histograms accumulate on-chip and HBM
+sees exactly one (ng,) write — the explicit-staging discipline of the paper.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+LANES = 128
+
+
+def _deposit_kernel(x_ref, q_ref, rho_ref, *, x0: float, dx: float, nc: int,
+                    ng_pad: int):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        rho_ref[...] = jnp.zeros_like(rho_ref)
+
+    x = x_ref[0, :]                            # (128,)
+    q = q_ref[0, :]
+    s = (x - x0) / dx
+    i = jnp.clip(jnp.floor(s).astype(jnp.int32), 0, nc - 1)
+    f = jnp.clip(s - i.astype(x.dtype), 0.0, 1.0)
+
+    cols = jax.lax.broadcasted_iota(jnp.int32, (LANES, ng_pad), 1)
+    left = jnp.where(cols == i[:, None], (q * (1.0 - f))[:, None], 0.0)
+    right = jnp.where(cols == (i + 1)[:, None], (q * f)[:, None], 0.0)
+    partial = jnp.sum(left + right, axis=0)    # (ng_pad,)
+    rho_ref[...] += partial[None, :].astype(rho_ref.dtype)
+
+
+def deposit_pallas(x: Array, q: Array, *, x0: float, dx: float, nc: int,
+                   ng_pad: int, interpret: bool = True) -> Array:
+    """x, q: (rows, 128) planes; returns (1, ng_pad) node charge density*dx."""
+    rows = x.shape[0]
+    grid = (rows,)
+    tile = pl.BlockSpec((1, LANES), lambda r: (r, 0))
+    acc = pl.BlockSpec((1, ng_pad), lambda r: (0, 0))  # VMEM-resident accum
+
+    kernel = functools.partial(_deposit_kernel, x0=x0, dx=dx, nc=nc,
+                               ng_pad=ng_pad)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[tile, tile],
+        out_specs=acc,
+        out_shape=jax.ShapeDtypeStruct((1, ng_pad), x.dtype),
+        interpret=interpret,
+    )(x, q)

@@ -1,0 +1,108 @@
+"""Pallas TPU kernel: flash attention (grouped-GQA, causal/windowed).
+
+The §Perf profile of every *_32k cell shows the pure-JAX chunked attention
+round-tripping f32 score blocks through HBM (subtract_exponential /
+broadcast_select / reduce-window fusions dominate the memory term). This
+kernel keeps the whole online-softmax block chain in VMEM: HBM traffic
+drops to read(Q) + read(K,V) + write(O) — the same explicit-staging
+discipline the paper applies to the particle mover (DESIGN.md §2), with
+Pallas's grid pipeline providing the copy/compute overlap that CUDA streams
+provide in the paper's async extension.
+
+Grid: (num_q_blocks,) over query rows; K/V stream through VMEM in an inner
+fori_loop over key blocks (the causal mask lets the loop stop at the
+diagonal block). Accumulators (o, m, l) live in VMEM scratch for the whole
+row block. Layout: q (b*h, sq, hd), kv (b*kvh, skv, hd) — heads folded into
+the leading batch so BlockSpecs stay 3-D with the last two dims
+(block, head_dim) = (128k, 128-multiple) hardware-aligned.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, skv: int, block_q: int,
+                  block_k: int, causal: bool, window: int, scale: float):
+    qi = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32) * scale          # (block_q, hd)
+
+    nk = skv // block_k
+    if causal:
+        # highest key block this query block can see
+        last = ((qi + 1) * block_q - 1) // block_k
+        nk_run = jnp.minimum(nk, last + 1)
+    else:
+        nk_run = nk
+
+    def body(ki, carry):
+        o, m, l = carry
+        k = jax.lax.dynamic_slice(
+            k_ref[0], (ki * block_k, 0), (block_k, k_ref.shape[2]))
+        v = jax.lax.dynamic_slice(
+            v_ref[0], (ki * block_k, 0), (block_k, v_ref.shape[2]))
+        s = q @ k.astype(jnp.float32).T               # (block_q, block_k)
+        qpos = qi * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0)
+        kpos = ki * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        mask = kpos < skv
+        if causal:
+            mask &= kpos <= qpos
+        if window > 0:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=1)
+        o_new = o * corr[:, None] + p @ v.astype(jnp.float32)
+        return o_new, m_new, l_new
+
+    o0 = jnp.zeros((block_q, o_ref.shape[2]), jnp.float32)
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    o, m, l = jax.lax.fori_loop(0, nk_run, body, (o0, m0, l0))
+    o_ref[0] = (o / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: Array, k: Array, v: Array, *,
+                           causal: bool = True, window: int = 0,
+                           block_q: int = 512, block_k: int = 512,
+                           interpret: bool = True) -> Array:
+    """q: (bh, sq, hd); k, v: (bh, skv, hd) — heads pre-folded/broadcast.
+
+    K/V for a whole (batch*head) row stay VMEM-resident across that row's
+    query blocks (constant index_map on the kv BlockSpecs); q/o tiles
+    stream. For 32k keys x 128 hd bf16 that is 8 MiB or 2x4 MiB — within
+    the 16 MiB v5e VMEM next to the (block_q, block_k) f32 tile.
+    """
+    bh, sq, hd = q.shape
+    skv = k.shape[1]
+    assert sq % block_q == 0 and skv % block_k == 0, (sq, skv)
+    grid = (bh, sq // block_q)
+    scale = hd ** -0.5
+
+    kernel = functools.partial(
+        _flash_kernel, skv=skv, block_q=block_q, block_k=block_k,
+        causal=causal, window=window, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, skv, hd), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, skv, hd), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, hd), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,97 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Handles the (cap,) <-> (rows, 128) planar relayout, padding, dtype plumbing,
+and backend selection: on CPU/GPU backends the kernels run in interpret mode
+(Python evaluation of the kernel body — the validation mode for this
+container); on TPU they compile through Mosaic.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import deposit as _deposit
+from repro.kernels import mover as _mover
+
+Array = jax.Array
+
+LANES = 128
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(a: Array, mult: int, value=0.0) -> Array:
+    n = a.shape[0]
+    pad = (-n) % mult
+    if pad == 0:
+        return a
+    return jnp.concatenate([a, jnp.full((pad,) + a.shape[1:], value, a.dtype)])
+
+
+def _planes(a: Array) -> Array:
+    return a.reshape(-1, LANES)
+
+
+@partial(jax.jit, static_argnames=("x0", "dx", "length", "qm", "dt", "b",
+                                   "boundary", "gather_mode", "tile_rows"))
+def mover_push(x: Array, v: Array, alive: Array, e: Array, *, x0: float,
+               dx: float, length: float, qm: float, dt: float,
+               b: tuple[float, float, float] = (0.0, 0.0, 0.0),
+               boundary: str = "periodic", gather_mode: str = "take",
+               tile_rows: int = 8):
+    """Fused mover. x: (cap,), v: (cap,3), alive: (cap,) bool, e: (ng,).
+
+    Returns (x, v, alive, hit_left, hit_right) with original shapes.
+    """
+    del gather_mode  # in-kernel gather is jnp.take; onehot lives at XLA level
+    cap = x.shape[0]
+    nc = round(length / dx)
+    block = tile_rows * LANES
+    xp = _planes(_pad_to(x, block))
+    vxp = _planes(_pad_to(v[:, 0], block))
+    vyp = _planes(_pad_to(v[:, 1], block))
+    vzp = _planes(_pad_to(v[:, 2], block))
+    ap = _planes(_pad_to(alive.astype(x.dtype), block))
+    ng_pad = e.shape[0] + ((-e.shape[0]) % LANES)
+    ep = _pad_to(e, LANES)[None, :]
+
+    xn, vxn, vyn, vzn, an, hl, hr = _mover.mover_push_pallas(
+        xp, vxp, vyp, vzp, ap, ep, x0=x0, dx=dx, nc=nc, length=length,
+        qm=qm, dt=dt, b=b, boundary=boundary, tile_rows=tile_rows,
+        interpret=_interpret())
+
+    def unpad(p):
+        return p.reshape(-1)[:cap]
+
+    v_out = jnp.stack([unpad(vxn), unpad(vyn), unpad(vzn)], axis=-1)
+    return (unpad(xn), v_out, unpad(an) > 0.5, unpad(hl) > 0.5,
+            unpad(hr) > 0.5)
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k"))
+def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+                    window: int = 0, block_q: int = 512,
+                    block_k: int = 512) -> Array:
+    """Flash attention over (bh, s, hd) head-folded inputs (see
+    kernels/flash_attention.py for the VMEM tiling contract)."""
+    from repro.kernels.flash_attention import flash_attention_pallas
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  block_q=block_q, block_k=block_k,
+                                  interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("x0", "dx", "nc", "ng"))
+def deposit(x: Array, q: Array, *, x0: float, dx: float, nc: int,
+            ng: int) -> Array:
+    """CIC deposition of per-particle charge q at positions x -> (ng,)/dx."""
+    xp = _planes(_pad_to(x, LANES))
+    qp = _planes(_pad_to(q, LANES))          # padded q == 0 -> no deposit
+    ng_pad = ng + ((-ng) % LANES)
+    rho = _deposit.deposit_pallas(xp, qp, x0=x0, dx=dx, nc=nc, ng_pad=ng_pad,
+                                  interpret=_interpret())
+    return rho[0, :ng] / dx

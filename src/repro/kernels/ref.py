@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+def _cic(x: Array, x0: float, dx: float, nc: int):
+    s = (x - x0) / dx
+    i = jnp.clip(jnp.floor(s).astype(jnp.int32), 0, nc - 1)
+    f = jnp.clip(s - i.astype(x.dtype), 0.0, 1.0)
+    return i, f
+
+
+def mover_push_ref(x, vx, vy, vz, alive_f, e_pad, *, x0, dx, nc, length,
+                   qm, dt, b, boundary):
+    """Oracle for kernels/mover.py. Same planar (rows, 128) layout."""
+    i, f = _cic(x, x0, dx, nc)
+    e = e_pad[0]
+    e_x = (e[i] * (1.0 - f) + e[i + 1] * f) * alive_f
+
+    qm_dt = qm * dt
+    half = 0.5 * qm_dt
+    vx = vx + half * e_x
+    bx, by, bz = b
+    if bx != 0.0 or by != 0.0 or bz != 0.0:
+        tx, ty, tz = bx * half, by * half, bz * half
+        t2 = tx * tx + ty * ty + tz * tz
+        sx, sy, sz = (2 * tx / (1 + t2), 2 * ty / (1 + t2), 2 * tz / (1 + t2))
+        vpx = vx + (vy * tz - vz * ty)
+        vpy = vy + (vz * tx - vx * tz)
+        vpz = vz + (vx * ty - vy * tx)
+        vx = vx + (vpy * sz - vpz * sy)
+        vy = vy + (vpz * sx - vpx * sz)
+        vz = vz + (vpx * sy - vpy * sx)
+    vx = vx + half * e_x
+
+    xn = x + vx * dt
+    if boundary == "open":
+        hl = jnp.zeros_like(alive_f)
+        hr = jnp.zeros_like(alive_f)
+        an = alive_f
+    elif boundary == "periodic":
+        xn = xn - jnp.floor(xn / length) * length
+        hl = jnp.zeros_like(alive_f)
+        hr = jnp.zeros_like(alive_f)
+        an = alive_f
+    else:
+        hl = alive_f * (xn < 0.0).astype(x.dtype)
+        hr = alive_f * (xn >= length).astype(x.dtype)
+        an = alive_f * (1.0 - hl) * (1.0 - hr)
+        eps = jnp.asarray(length, x.dtype) * (1.0 - 1e-7)
+        xn = jnp.clip(xn, 0.0, eps)
+    return xn, vx, vy, vz, an, hl, hr
+
+
+def deposit_ref(x, q, *, x0, dx, nc, ng_pad):
+    """Oracle for kernels/deposit.py: scatter-add CIC deposition."""
+    xf = x.reshape(-1)
+    qf = q.reshape(-1)
+    i, f = _cic(xf, x0, dx, nc)
+    rho = jnp.zeros((ng_pad,), x.dtype)
+    rho = rho.at[i].add(qf * (1.0 - f))
+    rho = rho.at[i + 1].add(qf * f)
+    return rho[None, :]

@@ -1,0 +1,198 @@
+"""Shared model machinery: config, norms, RoPE, initializers.
+
+One ``ModelConfig`` covers the whole assigned pool; per-arch deltas are
+config bits (DESIGN.md §5). All models stack per-layer parameters along a
+leading ``L`` axis and run ``lax.scan`` over layers, so compile time (and the
+dry-run wall-clock on this 1-core container) is O(1) in depth.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    arch: str
+    kind: str                      # dense | moe | hybrid | ssm | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    d_ff: int
+    vocab: int
+    n_kv_heads: int | None = None
+    head_dim: int | None = None    # gemma overrides to 256
+    ffn_act: str = "swiglu"        # swiglu | geglu (gated); gelu (plain)
+    qkv_bias: bool = False         # qwen2 family
+    pos: str = "rope"              # rope | sinusoidal
+    rope_theta: float = 1e4
+    tie_embeddings: bool = False
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    moe_aux_weight: float = 0.01
+    # --- hybrid (recurrentgemma): block pattern repeated over depth ---
+    pattern: tuple[str, ...] = ()  # e.g. ("rglru", "rglru", "attn")
+    local_window: int = 0          # sliding-window size for local attention
+    rglru_d_rnn: int = 0           # width of the recurrent branch
+    # --- ssm (mamba2) ---
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 128
+    ssm_expand: int = 2
+    # --- encoder-decoder (whisper) ---
+    enc_layers: int = 0
+    enc_seq: int = 0               # encoder context length (1500 frames)
+    # --- modality frontend stub ---
+    frontend: str | None = None    # audio_stub | vision_stub
+    frontend_tokens: int = 0       # prefix length supplied by input_specs
+    # --- numerics ---
+    dtype: Any = jnp.bfloat16
+    norm_eps: float = 1e-6
+    # --- beyond-paper performance knobs (§Perf; defaults = faithful
+    #     baseline). tp_axis activates explicit sharding constraints inside
+    #     the model (requires an ambient mesh with that axis name). ---
+    tp_axis: str | None = None
+    tp_size: int = 0          # |tp_axis|, so chunk sizes can match shards
+    dp_axes: tuple[str, ...] = ()
+    moe_group: int = 0        # split sequences into sub-groups of this many
+    #                           tokens before MoE dispatch (0 = off)
+    attn_p_bf16: bool = False  # cast softmax probs to bf16 for the PV matmul
+    attn_dp_only: bool = False  # compute attention replicated over tp:
+    #                             removes GSPMD's hd-contraction all-reduce
+    #                             when head counts don't divide the tp axis
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def kv_heads(self) -> int:
+        return self.n_kv_heads or self.n_heads
+
+    @property
+    def attention_free(self) -> bool:
+        return self.kind == "ssm"
+
+    @property
+    def subquadratic(self) -> bool:
+        """Eligible for the long_500k shape (DESIGN.md §5)."""
+        return self.kind == "ssm" or (self.kind == "hybrid"
+                                      and self.local_window > 0)
+
+    def num_params(self) -> int:
+        """Analytic parameter count (for roofline MODEL_FLOPS)."""
+        d, ff, v, hd = self.d_model, self.d_ff, self.vocab, self.hd
+        h, kv = self.n_heads, self.kv_heads
+        attn = d * h * hd + 2 * d * kv * hd + h * hd * d
+        if self.ffn_act in ("swiglu", "geglu"):
+            ffn = 3 * d * ff
+        else:
+            ffn = 2 * d * ff
+        if self.kind == "moe":
+            ffn = self.n_experts * ffn + d * self.n_experts   # + router
+        per_layer = attn + ffn + 2 * d
+        if self.kind == "ssm":
+            d_in = self.ssm_expand * d
+            nheads = d_in // self.ssm_head_dim
+            per_layer = (d * (2 * d_in + 2 * self.ssm_state + nheads)
+                         + d_in * d + 2 * d)
+        if self.kind == "hybrid":
+            # average the pattern's per-layer cost
+            attn_l = attn + ffn + 2 * d
+            rg = self.rglru_d_rnn
+            rg_l = d * rg * 2 + rg * d + 4 * rg + ffn + 2 * d
+            n_attn = sum(1 for p in self._full_pattern() if p == "attn")
+            n_rg = self.n_layers - n_attn
+            return (n_attn * attn_l + n_rg * rg_l + v * d
+                    + (0 if self.tie_embeddings else v * d))
+        total = self.n_layers * per_layer + v * d
+        if self.enc_layers:
+            total += self.enc_layers * (attn + ffn + 2 * d) + attn  # cross
+        if not self.tie_embeddings:
+            total += v * d
+        return total
+
+    def num_active_params(self) -> int:
+        """Active params per token (MoE: only top_k experts count)."""
+        if self.kind != "moe":
+            return self.num_params()
+        d, ff = self.d_model, self.d_ff
+        expert = 3 * d * ff if self.ffn_act in ("swiglu", "geglu") else 2 * d * ff
+        dense_part = self.num_params() - self.n_layers * self.n_experts * expert
+        return dense_part + self.n_layers * self.top_k * expert
+
+    def _full_pattern(self) -> tuple[str, ...]:
+        if not self.pattern:
+            return ("attn",) * self.n_layers
+        reps = -(-self.n_layers // len(self.pattern))
+        return (self.pattern * reps)[: self.n_layers]
+
+
+# ------------------------------------------------------------------ layers
+def rms_norm(x: Array, scale: Array, eps: float = 1e-6) -> Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(dt)
+
+
+def rope(x: Array, positions: Array, theta: float) -> Array:
+    """Rotary embedding. x: (..., s, h, hd); positions: (..., s)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs   # (..., s, half)
+    angles = angles[..., None, :]                               # head axis
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n: int, d: int) -> Array:
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, dim / d)
+    pe = jnp.zeros((n, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(ang))
+    pe = pe.at[:, 1::2].set(jnp.cos(ang[:, : (d + 1) // 2]))
+    return pe
+
+
+def dense_init(key: Array, shape: tuple[int, ...], dtype,
+               fan_in: int | None = None) -> Array:
+    fan = fan_in if fan_in is not None else shape[-2] if len(shape) > 1 else shape[-1]
+    std = 1.0 / math.sqrt(fan)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def act_fn(name: str):
+    return {"swiglu": jax.nn.silu, "geglu": jax.nn.gelu,
+            "gelu": jax.nn.gelu, "silu": jax.nn.silu}[name]
+
+
+def constrain(x: Array, cfg, spec: tuple) -> Array:
+    """with_sharding_constraint gated on cfg.tp_axis (no-op in the faithful
+    baseline and in meshless tests). spec entries: None, 'tp', 'dp'."""
+    if cfg.tp_axis is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+    entries = []
+    for e in spec:
+        if e == "tp":
+            entries.append(cfg.tp_axis)
+        elif e == "dp":
+            entries.append(cfg.dp_axes if cfg.dp_axes else None)
+        else:
+            entries.append(e)
+    return jax.lax.with_sharding_constraint(x, P(*entries))

@@ -1,0 +1,27 @@
+"""Feed-forward blocks: gated (SwiGLU/GeGLU) and plain MLP."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import act_fn
+
+Array = jax.Array
+
+
+def gated_ffn(x: Array, w_gate: Array, w_up: Array, w_down: Array,
+              act: str) -> Array:
+    """SwiGLU (llama/qwen) or GeGLU (gemma): act(x W_g) * (x W_u) W_d."""
+    f = act_fn(act)
+    g = f(jnp.einsum("...d,df->...f", x, w_gate))
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", g * u, w_down)
+
+
+def plain_ffn(x: Array, w_up: Array, b_up: Array, w_down: Array,
+              b_down: Array, act: str) -> Array:
+    """Whisper-style 2-matrix MLP with biases."""
+    f = act_fn(act)
+    h = f(jnp.einsum("...d,df->...f", x, w_up) + b_up)
+    return jnp.einsum("...f,fd->...d", h, w_down) + b_down

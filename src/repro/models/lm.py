@@ -1,0 +1,525 @@
+"""Decoder-only LM covering the dense / moe / vlm / hybrid / ssm families.
+
+Parameters for same-type layers are stacked along a leading axis and the
+forward pass is a single ``lax.scan`` over it — compile time is O(1) in
+depth, which is what makes 48-layer x 512-device dry-runs tractable on this
+container. Hybrid (recurrentgemma) scans over *groups* of its repeating
+(rglru, rglru, attn) pattern; trailing non-full-group layers are unrolled.
+
+Public API:
+  init_params(cfg, key)                         -> param pytree
+  forward(cfg, params, tokens, prefix_embeds)   -> (logits_fn-ready hidden, aux)
+  logits(cfg, params, hidden)                   -> full logits (small vocab)
+  init_cache(cfg, batch, s_max)                 -> decode cache pytree
+  decode_step(cfg, params, token, cache, pos)   -> (logits, new cache)
+
+The vlm/audio frontends are stubs by assignment: ``prefix_embeds`` arrives
+precomputed from input_specs() and is concatenated ahead of token embeds.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import mamba2, rglru
+from repro.models.attention import (chunked_attention, decode_attention,
+                                    update_cache)
+from repro.models.common import (ModelConfig, constrain, dense_init,
+                                 rms_norm, rope)
+from repro.models.ffn import gated_ffn
+from repro.models.moe import moe_ffn
+
+Array = jax.Array
+
+
+# ===================================================================== init
+def _split(key, n):
+    return list(jax.random.split(key, n))
+
+
+def _init_attn(key, cfg: ModelConfig, n: int) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.kv_heads, cfg.hd
+    ks = _split(key, 4)
+    p = {
+        "norm": jnp.zeros((n, d), cfg.dtype),
+        "wq": dense_init(ks[0], (n, d, h * hd), cfg.dtype, d),
+        "wk": dense_init(ks[1], (n, d, kv * hd), cfg.dtype, d),
+        "wv": dense_init(ks[2], (n, d, kv * hd), cfg.dtype, d),
+        "wo": dense_init(ks[3], (n, h * hd, d), cfg.dtype, h * hd),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((n, h * hd), cfg.dtype)
+        p["bk"] = jnp.zeros((n, kv * hd), cfg.dtype)
+        p["bv"] = jnp.zeros((n, kv * hd), cfg.dtype)
+    return p
+
+
+def _init_dense_ffn(key, cfg: ModelConfig, n: int) -> dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    ks = _split(key, 3)
+    return {
+        "norm": jnp.zeros((n, d), cfg.dtype),
+        "w_gate": dense_init(ks[0], (n, d, ff), cfg.dtype, d),
+        "w_up": dense_init(ks[1], (n, d, ff), cfg.dtype, d),
+        "w_down": dense_init(ks[2], (n, ff, d), cfg.dtype, ff),
+    }
+
+
+def _init_moe_ffn(key, cfg: ModelConfig, n: int) -> dict:
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = _split(key, 4)
+    return {
+        "norm": jnp.zeros((n, d), cfg.dtype),
+        "w_router": dense_init(ks[0], (n, d, e), cfg.dtype, d),
+        "w_gate": dense_init(ks[1], (n, e, d, ff), cfg.dtype, d),
+        "w_up": dense_init(ks[2], (n, e, d, ff), cfg.dtype, d),
+        "w_down": dense_init(ks[3], (n, e, ff, d), cfg.dtype, ff),
+    }
+
+
+def _init_ssm(key, cfg: ModelConfig, n: int) -> dict:
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    nst = cfg.ssm_state
+    nh = d_in // cfg.ssm_head_dim
+    conv_dim = d_in + 2 * nst
+    ks = _split(key, 3)
+    return {
+        "norm": jnp.zeros((n, d), cfg.dtype),
+        "in_proj": dense_init(ks[0], (n, d, 2 * d_in + 2 * nst + nh),
+                              cfg.dtype, d),
+        "conv_w": dense_init(ks[1], (n, mamba2.CONV_W, conv_dim), cfg.dtype,
+                             mamba2.CONV_W),
+        "a_log": jnp.zeros((n, nh), jnp.float32),
+        "d_skip": jnp.ones((n, nh), jnp.float32),
+        "dt_bias": jnp.zeros((n, nh), jnp.float32),
+        "gate_norm": jnp.zeros((n, d_in), cfg.dtype),
+        "out_proj": dense_init(ks[2], (n, d_in, d), cfg.dtype, d_in),
+    }
+
+
+def _init_rg(key, cfg: ModelConfig, n: int) -> dict:
+    d, dr = cfg.d_model, cfg.rglru_d_rnn
+    ks = _split(key, 5)
+    return {
+        "norm": jnp.zeros((n, d), cfg.dtype),
+        "w_x": dense_init(ks[0], (n, d, dr), cfg.dtype, d),
+        "w_gate_branch": dense_init(ks[1], (n, d, dr), cfg.dtype, d),
+        "conv_w": dense_init(ks[2], (n, rglru.CONV_W, dr), cfg.dtype,
+                             rglru.CONV_W),
+        "w_gate_x": dense_init(ks[3], (n, dr, dr), cfg.dtype, dr),
+        "w_gate_a": dense_init(ks[4], (n, dr, dr), cfg.dtype, dr),
+        "lam": jnp.full((n, dr), 0.5, jnp.float32),
+        "w_out": dense_init(ks[0], (n, dr, d), cfg.dtype, dr),
+    }
+
+
+def init_params(cfg: ModelConfig, key: Array) -> dict:
+    ks = _split(key, 8)
+    d = cfg.d_model
+    params: dict = {
+        "embed": dense_init(ks[0], (cfg.vocab, d), cfg.dtype, d),
+        "final_norm": jnp.zeros((d,), cfg.dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = dense_init(ks[1], (d, cfg.vocab), cfg.dtype, d)
+
+    if cfg.kind in ("dense", "moe", "vlm"):
+        ffn_init = _init_moe_ffn if cfg.kind == "moe" else _init_dense_ffn
+        params["blocks"] = {
+            "attn": _init_attn(ks[2], cfg, cfg.n_layers),
+            "ffn": ffn_init(ks[3], cfg, cfg.n_layers),
+        }
+    elif cfg.kind == "ssm":
+        params["blocks"] = _init_ssm(ks[2], cfg, cfg.n_layers)
+    elif cfg.kind == "hybrid":
+        pat = cfg.pattern
+        n_groups = cfg.n_layers // len(pat)
+        n_tail = cfg.n_layers - n_groups * len(pat)
+        group: dict = {}
+        for i, kind in enumerate(pat):
+            sub = {}
+            if kind == "attn":
+                sub["mix"] = _init_attn(jax.random.fold_in(ks[2], i), cfg,
+                                        n_groups)
+            else:
+                sub["mix"] = _init_rg(jax.random.fold_in(ks[2], i), cfg,
+                                      n_groups)
+            sub["ffn"] = _init_dense_ffn(jax.random.fold_in(ks[3], i), cfg,
+                                         n_groups)
+            group[f"slot{i}"] = sub
+        params["blocks"] = group
+        tail = {}
+        for i in range(n_tail):
+            kind = pat[i % len(pat)]
+            sub = {"mix": (_init_attn if kind == "attn" else _init_rg)(
+                jax.random.fold_in(ks[4], i), cfg, 1)}
+            sub["ffn"] = _init_dense_ffn(jax.random.fold_in(ks[5], i), cfg, 1)
+            tail[f"tail{i}"] = sub
+        params["tail"] = tail
+    else:
+        raise ValueError(cfg.kind)
+    return params
+
+
+# ================================================================== forward
+def _attn_apply(cfg: ModelConfig, p: dict, x: Array, positions: Array,
+                *, window: int = 0, causal: bool = True) -> Array:
+    b, s, d = x.shape
+    h, kv, hd = cfg.n_heads, cfg.kv_heads, cfg.hd
+    xn = rms_norm(x, p["norm"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dk->bsk", xn, p["wq"])
+    k = jnp.einsum("bsd,dk->bsk", xn, p["wk"])
+    v = jnp.einsum("bsd,dk->bsk", xn, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, kv, hd)
+    v = v.reshape(b, s, kv, hd)
+    if cfg.pos == "rope":
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    # §Perf: sequence-parallel attention — q rows sharded over tp (works
+    # for ANY head count: no padded-head waste, no score all-reduce);
+    # GQA K/V are small and get all-gathered
+    if cfg.attn_dp_only:
+        spec = ("dp", None, None, None)
+        q = constrain(q, cfg, spec)
+        k = constrain(k, cfg, spec)
+        v = constrain(v, cfg, spec)
+    else:
+        q = constrain(q, cfg, ("dp", "tp", None, None))
+        k = constrain(k, cfg, ("dp", None, None, None))
+        v = constrain(v, cfg, ("dp", None, None, None))
+    # q-chunk must not exceed the per-shard row count or GSPMD replicates
+    q_chunk = 512
+    if cfg.tp_size:
+        q_chunk = max(128, min(512, s // cfg.tp_size))
+    out = chunked_attention(q, k, v, causal=causal, window=window,
+                            p_bf16=cfg.attn_p_bf16, q_chunk=q_chunk)
+    out = out.reshape(b, s, h * hd)
+    out = constrain(out, cfg, ("dp", "tp", None))
+    return x + jnp.einsum("bsk,kd->bsd", out, p["wo"])
+
+
+def _attn_decode(cfg: ModelConfig, p: dict, x: Array, pos: Array,
+                 kc: Array, vc: Array, *, window: int = 0
+                 ) -> tuple[Array, Array, Array]:
+    b, s, d = x.shape                       # s == 1
+    h, kv, hd = cfg.n_heads, cfg.kv_heads, cfg.hd
+    xn = rms_norm(x, p["norm"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dk->bsk", xn, p["wq"])
+    k = jnp.einsum("bsd,dk->bsk", xn, p["wk"])
+    v = jnp.einsum("bsd,dk->bsk", xn, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, 1, h, hd)
+    k = k.reshape(b, 1, kv, hd)
+    v = v.reshape(b, 1, kv, hd)
+    if cfg.pos == "rope":
+        pp = jnp.full((b, 1), pos, jnp.int32)
+        q = rope(q, pp, cfg.rope_theta)
+        k = rope(k, pp, cfg.rope_theta)
+    kc, vc = update_cache(kc, vc, k, v, pos)
+    cache_len = jnp.full((b,), pos, jnp.int32)
+    out = decode_attention(q, kc, vc, cache_len, window=window,
+                           p_bf16=cfg.attn_p_bf16)
+    out = out.reshape(b, 1, h * hd)
+    return x + jnp.einsum("bsk,kd->bsd", out, p["wo"]), kc, vc
+
+
+def _ffn_apply(cfg: ModelConfig, p: dict, x: Array) -> tuple[Array, Array]:
+    xn = rms_norm(x, p["norm"], cfg.norm_eps)
+    if "w_router" in p:
+        out, aux = moe_ffn(xn, p["w_router"], p["w_gate"], p["w_up"],
+                           p["w_down"], top_k=cfg.top_k,
+                           capacity_factor=cfg.capacity_factor,
+                           act=cfg.ffn_act, cfg=cfg)
+    else:
+        out = gated_ffn(xn, p["w_gate"], p["w_up"], p["w_down"], cfg.ffn_act)
+        aux = jnp.zeros((), jnp.float32)
+    return x + out, aux
+
+
+def _ssm_apply(cfg: ModelConfig, p: dict, x: Array) -> Array:
+    b, s, d = x.shape
+    d_in = cfg.ssm_expand * d
+    nst, nh = cfg.ssm_state, (cfg.ssm_expand * d) // cfg.ssm_head_dim
+    hp = cfg.ssm_head_dim
+    xn = rms_norm(x, p["norm"], cfg.norm_eps)
+    zxbcdt = jnp.einsum("bsd,dk->bsk", xn, p["in_proj"])
+    z, xc, bmat, cmat, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + nst, 2 * d_in + 2 * nst], axis=-1)
+    conv_in = jnp.concatenate([xc, bmat, cmat], axis=-1)
+    conv_out = mamba2._depthwise_conv(conv_in, p["conv_w"])
+    conv_out = jax.nn.silu(conv_out)
+    xc, bmat, cmat = jnp.split(conv_out, [d_in, d_in + nst], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    xh = xc.reshape(b, s, nh, hp)
+    y, _ = mamba2.ssd_chunked(xh, dt, p["a_log"], bmat, cmat, cfg.ssm_chunk)
+    y = y + p["d_skip"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, s, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    return x + jnp.einsum("bsk,kd->bsd", y, p["out_proj"])
+
+
+def _ssm_decode(cfg: ModelConfig, p: dict, x: Array, ssm_state: Array,
+                conv_state: Array) -> tuple[Array, Array, Array]:
+    b, s, d = x.shape
+    d_in = cfg.ssm_expand * d
+    nst, nh = cfg.ssm_state, (cfg.ssm_expand * d) // cfg.ssm_head_dim
+    hp = cfg.ssm_head_dim
+    xn = rms_norm(x, p["norm"], cfg.norm_eps)
+    zxbcdt = jnp.einsum("bsd,dk->bsk", xn, p["in_proj"])
+    z, xc, bmat, cmat, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + nst, 2 * d_in + 2 * nst], axis=-1)
+    conv_in = jnp.concatenate([xc, bmat, cmat], axis=-1)
+    conv_out, conv_state = rglru.causal_conv(conv_in, p["conv_w"], conv_state)
+    conv_out = jax.nn.silu(conv_out)
+    xc, bmat, cmat = jnp.split(conv_out, [d_in, d_in + nst], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (b, 1, nh)
+    xh = xc.reshape(b, 1, nh, hp)
+    y, ssm_state = mamba2.ssd_decode_step(xh, dt, p["a_log"], bmat, cmat,
+                                          ssm_state)
+    y = y + p["d_skip"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, 1, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    return x + jnp.einsum("bsk,kd->bsd", y, p["out_proj"]), ssm_state, \
+        conv_state
+
+
+def _rg_apply(cfg: ModelConfig, p: dict, x: Array,
+              h0: Array | None = None, conv_state: Array | None = None,
+              decode: bool = False):
+    xn = rms_norm(x, p["norm"], cfg.norm_eps)
+    branch = jnp.einsum("bsd,dr->bsr", xn, p["w_x"])
+    gate_branch = jax.nn.gelu(
+        jnp.einsum("bsd,dr->bsr", xn, p["w_gate_branch"]))
+    conv_out, conv_state = rglru.causal_conv(branch, p["conv_w"], conv_state)
+    gx = jnp.einsum("bsr,rq->bsq", conv_out, p["w_gate_x"])
+    ga = jnp.einsum("bsr,rq->bsq", conv_out, p["w_gate_a"])
+    if decode:
+        y, h = rglru.rg_lru_step(conv_out, gx, ga, p["lam"], h0)
+    else:
+        y, h = rglru.rg_lru(conv_out, gx, ga, p["lam"], h0)
+    y = y * gate_branch
+    return x + jnp.einsum("bsr,rd->bsd", y, p["w_out"]), h, conv_state
+
+
+# --------------------------------------------------------------- full pass
+def forward(cfg: ModelConfig, params: dict, tokens: Array,
+            prefix_embeds: Array | None = None,
+            remat: bool = False) -> tuple[Array, Array]:
+    """Returns (hidden (b, s_total, d) after final norm, moe aux loss).
+
+    remat=True checkpoints each scanned layer (activation recomputation in
+    the backward pass — the standard memory/compute trade at 32k contexts).
+    """
+    x = params["embed"][tokens].astype(cfg.dtype)
+    if cfg.arch.startswith("gemma") or cfg.arch.startswith("recurrentgemma"):
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.dtype)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(cfg.dtype), x], axis=1)
+    b, s, d = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    if cfg.pos == "sinusoidal":
+        from repro.models.common import sinusoidal_positions
+        x = x + sinusoidal_positions(s, d).astype(cfg.dtype)
+
+    aux_total = jnp.zeros((), jnp.float32)
+
+    maybe_remat = jax.checkpoint if remat else (lambda f: f)
+
+    if cfg.kind in ("dense", "moe", "vlm"):
+        @maybe_remat
+        def body(carry, lp):
+            h, aux = carry
+            h = _attn_apply(cfg, lp["attn"], h, positions,
+                            window=cfg.local_window)
+            h, a = _ffn_apply(cfg, lp["ffn"], h)
+            return (h, aux + a), None
+
+        (x, aux_total), _ = jax.lax.scan(body, (x, aux_total),
+                                         params["blocks"])
+    elif cfg.kind == "ssm":
+        @maybe_remat
+        def body(h, lp):
+            return _ssm_apply(cfg, lp, h), None
+
+        x, _ = jax.lax.scan(body, x, params["blocks"])
+    elif cfg.kind == "hybrid":
+        pat = cfg.pattern
+
+        @maybe_remat
+        def body(h, gp):
+            for i, kind in enumerate(pat):
+                sub = gp[f"slot{i}"]
+                if kind == "attn":
+                    h = _attn_apply(cfg, sub["mix"], h, positions,
+                                    window=cfg.local_window)
+                else:
+                    h, _, _ = _rg_apply(cfg, sub["mix"], h)
+                h, _ = _ffn_apply(cfg, sub["ffn"], h)
+            return h, None
+
+        x, _ = jax.lax.scan(body, x, params["blocks"])
+        for i in range(len(params.get("tail", {}))):
+            sub = jax.tree.map(lambda a: a[0], params["tail"][f"tail{i}"])
+            kind = pat[i % len(pat)]
+            if kind == "attn":
+                x = _attn_apply(cfg, sub["mix"], x, positions,
+                                window=cfg.local_window)
+            else:
+                x, _, _ = _rg_apply(cfg, sub["mix"], x)
+            x, _ = _ffn_apply(cfg, sub["ffn"], x)
+    else:
+        raise ValueError(cfg.kind)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, aux_total
+
+
+def unembed_matrix(cfg: ModelConfig, params: dict) -> Array:
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["unembed"]
+
+
+def logits_fn(cfg: ModelConfig, params: dict, hidden: Array) -> Array:
+    return jnp.einsum("bsd,dv->bsv", hidden, unembed_matrix(cfg, params))
+
+
+# ==================================================================== decode
+def init_cache(cfg: ModelConfig, batch: int, s_max: int) -> dict:
+    kv, hd = cfg.kv_heads, cfg.hd
+    dt = cfg.dtype
+    if cfg.kind in ("dense", "moe", "vlm"):
+        shape = (cfg.n_layers, batch, s_max, kv, hd)
+        return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+    if cfg.kind == "ssm":
+        d_in = cfg.ssm_expand * cfg.d_model
+        nh = d_in // cfg.ssm_head_dim
+        conv_dim = d_in + 2 * cfg.ssm_state
+        return {
+            "ssm": jnp.zeros((cfg.n_layers, batch, nh, cfg.ssm_state,
+                              cfg.ssm_head_dim), jnp.float32),
+            "conv": jnp.zeros((cfg.n_layers, batch, rglru.CONV_W - 1,
+                               conv_dim), dt),
+        }
+    if cfg.kind == "hybrid":
+        pat = cfg.pattern
+        g = cfg.n_layers // len(pat)
+        n_tail = cfg.n_layers - g * len(pat)
+        dr = cfg.rglru_d_rnn
+        cache: dict = {}
+        for i, kind in enumerate(pat):
+            if kind == "attn":
+                cache[f"slot{i}"] = {
+                    "k": jnp.zeros((g, batch, s_max, kv, hd), dt),
+                    "v": jnp.zeros((g, batch, s_max, kv, hd), dt)}
+            else:
+                cache[f"slot{i}"] = {
+                    "h": jnp.zeros((g, batch, dr), jnp.float32),
+                    "conv": jnp.zeros((g, batch, rglru.CONV_W - 1, dr), dt)}
+        for i in range(n_tail):
+            kind = pat[i % len(pat)]
+            if kind == "attn":
+                cache[f"tail{i}"] = {
+                    "k": jnp.zeros((1, batch, s_max, kv, hd), dt),
+                    "v": jnp.zeros((1, batch, s_max, kv, hd), dt)}
+            else:
+                cache[f"tail{i}"] = {
+                    "h": jnp.zeros((1, batch, dr), jnp.float32),
+                    "conv": jnp.zeros((1, batch, rglru.CONV_W - 1, dr), dt)}
+        return cache
+    raise ValueError(cfg.kind)
+
+
+def decode_step(cfg: ModelConfig, params: dict, token: Array, cache: dict,
+                pos: Array) -> tuple[Array, dict]:
+    """token: (b, 1) int32; pos: scalar int32 (cache write position)."""
+    x = params["embed"][token].astype(cfg.dtype)
+    if cfg.arch.startswith("gemma") or cfg.arch.startswith("recurrentgemma"):
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.dtype)
+    b = x.shape[0]
+    if cfg.pos == "sinusoidal":
+        # compute the single needed row; never materialize a 500k-row table
+        x = x + _sinusoid_row(pos, x.shape[-1]).astype(cfg.dtype)
+
+    if cfg.kind in ("dense", "moe", "vlm"):
+        def body(h, inp):
+            lp, kc, vc = inp
+            h, kc, vc = _attn_decode(cfg, lp["attn"], h, pos, kc, vc,
+                                     window=cfg.local_window)
+            h, _ = _ffn_apply(cfg, lp["ffn"], h)
+            return h, (kc, vc)
+
+        x, (kc, vc) = jax.lax.scan(
+            body, x, (params["blocks"], cache["k"], cache["v"]))
+        cache = {"k": kc, "v": vc}
+    elif cfg.kind == "ssm":
+        def body(h, inp):
+            lp, st, cv = inp
+            h, st, cv = _ssm_decode(cfg, lp, h, st, cv)
+            return h, (st, cv)
+
+        x, (st, cv) = jax.lax.scan(
+            body, x, (params["blocks"], cache["ssm"], cache["conv"]))
+        cache = {"ssm": st, "conv": cv}
+    elif cfg.kind == "hybrid":
+        pat = cfg.pattern
+        new_cache: dict = {}
+
+        def body(h, inp):
+            gp, gcache = inp
+            outc = {}
+            for i, kind in enumerate(pat):
+                sub = gp[f"slot{i}"]
+                c = gcache[f"slot{i}"]
+                if kind == "attn":
+                    h, kc, vc = _attn_decode(cfg, sub["mix"], h, pos,
+                                             c["k"], c["v"],
+                                             window=cfg.local_window)
+                    outc[f"slot{i}"] = {"k": kc, "v": vc}
+                else:
+                    h, hs, cv = _rg_apply(cfg, sub["mix"], h, c["h"],
+                                          c["conv"], decode=True)
+                    outc[f"slot{i}"] = {"h": hs, "conv": cv}
+                h, _ = _ffn_apply(cfg, sub["ffn"], h)
+            return h, outc
+
+        gcaches = {k: v for k, v in cache.items() if k.startswith("slot")}
+        x, outc = jax.lax.scan(body, x, (params["blocks"], gcaches))
+        new_cache.update(outc)
+        for i in range(len(params.get("tail", {}))):
+            sub = jax.tree.map(lambda a: a[0], params["tail"][f"tail{i}"])
+            c = jax.tree.map(lambda a: a[0], cache[f"tail{i}"])
+            kind = pat[i % len(pat)]
+            if kind == "attn":
+                x, kc, vc = _attn_decode(cfg, sub["mix"], x, pos, c["k"],
+                                         c["v"], window=cfg.local_window)
+                new_cache[f"tail{i}"] = {"k": kc[None], "v": vc[None]}
+            else:
+                x, hs, cv = _rg_apply(cfg, sub["mix"], x, c["h"], c["conv"],
+                                      decode=True)
+                new_cache[f"tail{i}"] = {"h": hs[None], "conv": cv[None]}
+            x, _ = _ffn_apply(cfg, sub["ffn"], x)
+        cache = new_cache
+    else:
+        raise ValueError(cfg.kind)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return logits_fn(cfg, params, x), cache
+
+
+def _sinusoid_row(pos: Array, d: int) -> Array:
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)
+    ang = pos.astype(jnp.float32) / jnp.power(10000.0, dim / d)
+    row = jnp.zeros((d,), jnp.float32)
+    row = row.at[0::2].set(jnp.sin(ang))
+    row = row.at[1::2].set(jnp.cos(ang[: (d + 1) // 2]))
+    return row

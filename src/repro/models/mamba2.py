@@ -1,0 +1,111 @@
+"""Mamba-2 SSD (state-space duality) layer — chunked, scan-friendly.
+
+Implements the SSD algorithm of arXiv:2405.21060: the sequence is split into
+chunks of length Q; within a chunk the output is a masked (decay-weighted)
+attention-like matmul, across chunks a small recurrent state (h, n, p) per
+head is carried by a scan. This is the chunked-streaming discipline again
+(DESIGN.md §8): the inter-chunk state pipeline mirrors the paper's particle
+batch pipeline.
+
+Layout: x (b, s, d) -> in_proj -> [z (d_in) | xc (d_in) | B (n) | C (n) |
+dt (h)] with d_in = expand * d, heads h = d_in / head_dim, B/C shared across
+heads (the MQA-analogue of SSD). A short depthwise causal conv (width 4)
+precedes the SSM on (xc|B|C), as in the reference implementation.
+
+Decode carries (ssm_state (b, h, n, p), conv_state (b, 3, conv_dim)).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+CONV_W = 4
+
+
+def _depthwise_conv(x: Array, w: Array) -> Array:
+    """Causal depthwise conv. x: (b, s, c), w: (CONV_W, c)."""
+    pads = jnp.pad(x, ((0, 0), (CONV_W - 1, 0), (0, 0)))
+    out = sum(pads[:, i: i + x.shape[1], :] * w[i] for i in range(CONV_W))
+    return out
+
+
+def ssd_chunked(xh: Array, dt: Array, a_log: Array, b_mat: Array,
+                c_mat: Array, chunk: int,
+                h0: Array | None = None) -> tuple[Array, Array]:
+    """Chunked SSD scan.
+
+    xh: (b, s, h, p) inputs; dt: (b, s, h) positive step sizes;
+    a_log: (h,) log-decay parameter (A = -exp(a_log));
+    b_mat, c_mat: (b, s, n) shared input/output projections.
+    Returns (y (b, s, h, p), final_state (b, h, n, p)).
+    """
+    bsz, s, nh, p = xh.shape
+    n = b_mat.shape[-1]
+    q = chunk
+    assert s % q == 0, (s, q)
+    nc = s // q
+
+    a = -jnp.exp(a_log.astype(jnp.float32))                 # (h,) negative
+    dta = dt.astype(jnp.float32) * a                        # (b, s, h) log-decay
+    xbar = xh.astype(jnp.float32) * dt.astype(jnp.float32)[..., None]
+
+    # chunked views
+    dta_c = dta.reshape(bsz, nc, q, nh)
+    x_c = xbar.reshape(bsz, nc, q, nh, p)
+    b_c = b_mat.astype(jnp.float32).reshape(bsz, nc, q, n)
+    c_c = c_mat.astype(jnp.float32).reshape(bsz, nc, q, n)
+
+    cum = jnp.cumsum(dta_c, axis=2)                          # (b, nc, q, h)
+    total = cum[:, :, -1:, :]                                # (b, nc, 1, h)
+
+    # ---- intra-chunk (quadratic within chunk) ----
+    # L[i,j] = exp(cum_i - cum_j) for i >= j else 0
+    li = cum[:, :, :, None, :] - cum[:, :, None, :, :]       # (b,nc,q,q,h)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    decay = jnp.where(mask[None, None, :, :, None], jnp.exp(li), 0.0)
+    scores = jnp.einsum("bcin,bcjn->bcij", c_c, b_c)         # (b,nc,q,q)
+    y_intra = jnp.einsum("bcij,bcijh,bcjhp->bcihp",
+                         scores, decay, x_c)
+
+    # ---- per-chunk outgoing state ----
+    # S_c = sum_j exp(total - cum_j) * B_j x_j^T   -> (b, nc, h, n, p)
+    w_out = jnp.exp(total - cum)                             # (b, nc, q, h)
+    s_c = jnp.einsum("bcjn,bcjh,bcjhp->bchnp", b_c, w_out, x_c)
+
+    # ---- inter-chunk recurrence over nc (small state scan) ----
+    chunk_decay = jnp.exp(total[:, :, 0, :])                 # (b, nc, h)
+
+    def body(h_prev, inp):
+        dec, s_new = inp                                     # (b,h), (b,h,n,p)
+        h_new = h_prev * dec[..., None, None] + s_new
+        return h_new, h_prev                                 # emit INCOMING state
+
+    if h0 is None:
+        h0 = jnp.zeros((bsz, nh, n, p), jnp.float32)
+    h_last, h_in = jax.lax.scan(
+        body, h0,
+        (chunk_decay.transpose(1, 0, 2), s_c.transpose(1, 0, 2, 3, 4)))
+    h_in = h_in.transpose(1, 0, 2, 3, 4)                     # (b, nc, h, n, p)
+
+    # ---- inter-chunk contribution ----
+    w_in = jnp.exp(cum)                                      # (b, nc, q, h)
+    y_inter = jnp.einsum("bcqn,bcqh,bchnp->bcqhp", c_c, w_in, h_in)
+
+    y = (y_intra + y_inter).reshape(bsz, s, nh, p)
+    return y, h_last
+
+
+def ssd_decode_step(xh: Array, dt: Array, a_log: Array, b_mat: Array,
+                    c_mat: Array, state: Array) -> tuple[Array, Array]:
+    """Single-token SSD update. xh: (b, 1, h, p); state: (b, h, n, p)."""
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    dta = dt[:, 0].astype(jnp.float32) * a                   # (b, h)
+    dec = jnp.exp(dta)
+    xbar = xh[:, 0].astype(jnp.float32) * dt[:, 0][..., None]
+    s_new = jnp.einsum("bn,bhp->bhnp", b_mat[:, 0].astype(jnp.float32), xbar)
+    state = state * dec[..., None, None] + s_new
+    y = jnp.einsum("bn,bhnp->bhp", c_mat[:, 0].astype(jnp.float32), state)
+    return y[:, None], state

@@ -1,0 +1,115 @@
+"""Mixture-of-Experts: token-choice top-k routing with capacity dropping.
+
+The load-imbalance story here is deliberate (DESIGN.md §8): BIT1's per-cell
+particle lists produce uneven work per cell, which the paper fixes with
+OpenMP dynamic tasks; token-choice routing produces uneven work per expert,
+which the TPU-native fix handles *structurally* with fixed expert capacity
+(uniform tiles again). Dispatch/combine are dense one-hot einsums grouped by
+batch row (Mesh-TensorFlow style): no data-dependent shapes, and GSPMD
+lowers the expert-sharded einsums into the EP all-to-all.
+
+Shapes: tokens grouped as (g, s) with g = batch rows (sharded over data),
+experts E sharded over model. Dispatch tensor (g, s, E, C) with per-group
+capacity C = ceil(cf * s * k / E); its einsum cost is ~E*C/s of a d x d
+matmul per token (~10% of expert FLOPs at cf=1.25) — the price of static
+shapes; the §Perf log revisits it.
+
+llama4-maverick: 128 experts, top-1. dbrx: 16 experts, top-4 (fine-grained).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import act_fn
+
+Array = jax.Array
+
+
+def route_topk(logits: Array, k: int) -> tuple[Array, Array]:
+    """logits: (..., E) -> (weights (..., k), idx (..., k)); softmax over top-k."""
+    vals, idx = jax.lax.top_k(logits, k)
+    w = jax.nn.softmax(vals.astype(jnp.float32), axis=-1)
+    return w.astype(logits.dtype), idx
+
+
+def moe_ffn(x: Array, w_router: Array, w_gate: Array, w_up: Array,
+            w_down: Array, *, top_k: int, capacity_factor: float,
+            act: str, cfg=None) -> tuple[Array, Array]:
+    """Token-choice MoE layer.
+
+    x: (g, s, d) - groups g are batch rows; w_router: (d, E);
+    expert weights: (E, d, f) / (E, f, d).
+    Returns (output (g, s, d), aux load-balance loss scalar).
+
+    §Perf knobs (cfg, optional): ``moe_group`` re-groups long sequences
+    into sub-groups of that many tokens before dispatch — the dispatch
+    tensor is (g, s_g, E, C) with C ~ s_g*k/E, so its footprint scales with
+    s_g: at 32k tokens/group the baseline materializes 64x more dispatch
+    bytes than 512-token groups. ``tp_axis`` adds explicit EP sharding
+    constraints so the dispatch einsum lowers to the all-to-all instead of
+    all-gather + all-reduce.
+    """
+    g0, s0, d = x.shape
+    if cfg is not None and cfg.moe_group and s0 > cfg.moe_group \
+            and s0 % cfg.moe_group == 0:
+        x = x.reshape(g0 * (s0 // cfg.moe_group), cfg.moe_group, d)
+    g, s, _ = x.shape
+    e = w_router.shape[-1]
+
+    logits = jnp.einsum("gsd,de->gse", x, w_router)
+    weights, idx = route_topk(logits, top_k)                 # (g, s, k)
+
+    # Switch-style load-balance aux: E * sum_e f_e * p_e
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    onehot_any = jax.nn.one_hot(idx, e, dtype=jnp.float32).sum(-2)  # (g,s,E)
+    aux = e * jnp.sum(onehot_any.mean((0, 1)) * probs.mean((0, 1)))
+
+    capacity = max(1, int(capacity_factor * s * top_k / e))
+    capacity = min(capacity, s)
+
+    # per-(expert) running position of each routed (token, k) inside a group
+    oh = jax.nn.one_hot(idx, e, dtype=jnp.int32)             # (g, s, k, E)
+    oh_flat = oh.reshape(g, s * top_k, e)
+    pos = jnp.cumsum(oh_flat, axis=1) - 1                    # (g, s*k, E)
+    pos = (pos * oh_flat).sum(-1).reshape(g, s, top_k)       # (g, s, k)
+    keep = pos < capacity
+
+    pos_oh = jax.nn.one_hot(jnp.where(keep, pos, capacity), capacity,
+                            dtype=x.dtype)                   # (g, s, k, C)
+    disp = (oh.astype(x.dtype) * keep[..., None].astype(x.dtype))
+    # dispatch tensor (g, s, E, C) = sum_k onehot_E * onehot_C
+    dispatch = jnp.einsum("gske,gskc->gsec", disp, pos_oh)
+    combine = jnp.einsum("gske,gskc,gsk->gsec", disp, pos_oh,
+                         weights.astype(x.dtype))
+
+    if cfg is not None and cfg.tp_axis:
+        from repro.models.common import constrain
+        dispatch = constrain(dispatch, cfg, ("dp", None, "tp", None))
+        combine = constrain(combine, cfg, ("dp", None, "tp", None))
+
+    # (E, g, C, d): EP all-to-all materializes here when E is model-sharded
+    expert_in = jnp.einsum("gsec,gsd->egcd", dispatch, x)
+    if cfg is not None and cfg.tp_axis:
+        from repro.models.common import constrain
+        if s0 == 1:
+            # decode: keep d sharded over the FSDP axis so the expert
+            # matmul reduces partial sums (tiny all-reduce) instead of
+            # all-gathering the expert weights (§Perf llama4-decode)
+            expert_in = constrain(expert_in, cfg, ("tp", None, None, "dp"))
+        else:
+            expert_in = constrain(expert_in, cfg, ("tp", "dp", None, None))
+
+    f = act_fn(act)
+    gate = f(jnp.einsum("egcd,edf->egcf", expert_in, w_gate))
+    up = jnp.einsum("egcd,edf->egcf", expert_in, w_up)
+    expert_out = jnp.einsum("egcf,efd->egcd", gate * up, w_down)
+    if cfg is not None and cfg.tp_axis:
+        from repro.models.common import constrain
+        expert_out = constrain(expert_out, cfg, ("tp", "dp", None, None))
+
+    out = jnp.einsum("gsec,egcd->gsd", combine, expert_out)
+    if x.shape[0] != g0:
+        out = out.reshape(g0, s0, d)
+    return out, aux.astype(jnp.float32)

@@ -1,0 +1,46 @@
+"""Model registry: uniform (init / forward / cache / decode) API per arch."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+
+from repro.models import lm, whisper
+from repro.models.common import ModelConfig
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init_params: Callable          # (key) -> params
+    forward: Callable              # (params, tokens, aux_input) -> (hidden, aux)
+    logits: Callable               # (params, hidden) -> logits
+    init_cache: Callable           # (batch, s_max) -> cache
+    decode_step: Callable          # (params, token, cache, pos) -> (logits, cache)
+    has_decode: bool = True
+
+
+def build(cfg: ModelConfig) -> Model:
+    if cfg.kind == "encdec":
+        return Model(
+            cfg=cfg,
+            init_params=lambda key: whisper.init_params(cfg, key),
+            forward=lambda p, tokens, aux=None: whisper.forward(
+                cfg, p, tokens, aux),
+            logits=lambda p, h: lm.logits_fn(cfg, p, h),
+            init_cache=lambda b, s: whisper.init_cache(cfg, b, s),
+            decode_step=lambda p, t, c, pos: whisper.decode_step(
+                cfg, p, t, c, pos),
+        )
+    return Model(
+        cfg=cfg,
+        init_params=lambda key: lm.init_params(cfg, key),
+        forward=lambda p, tokens, aux=None: lm.forward(cfg, p, tokens, aux),
+        logits=lambda p, h: lm.logits_fn(cfg, p, h),
+        init_cache=lambda b, s: lm.init_cache(cfg, b, s),
+        decode_step=lambda p, t, c, pos: lm.decode_step(cfg, p, t, c, pos),
+    )

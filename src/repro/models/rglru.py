@@ -1,0 +1,76 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+The Real-Gated Linear Recurrent Unit:
+
+    r_t = sigmoid(x_t W_a)                  (recurrence gate)
+    i_t = sigmoid(x_t W_x)                  (input gate)
+    log a_t = -c * softplus(Lambda) * r_t   (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training uses an associative scan (log-depth on TPU); decode is a one-step
+update carrying h. The surrounding recurrent block is Griffin's: a linear
+branch with a short causal conv feeding the RG-LRU, times a GeLU gate
+branch, projected back to d_model.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+RG_C = 8.0
+CONV_W = 4
+
+
+def rg_lru(x: Array, gate_x: Array, gate_a: Array, lam: Array,
+           h0: Array | None = None) -> tuple[Array, Array]:
+    """x, gates: (b, s, d_rnn); lam: (d_rnn,). Returns (y, h_last)."""
+    r = jax.nn.sigmoid(gate_a.astype(jnp.float32))
+    i = jax.nn.sigmoid(gate_x.astype(jnp.float32))
+    log_a = -RG_C * jax.nn.softplus(lam.astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) computed stably via expm1: 1 - exp(2 log a)
+    mult = jnp.sqrt(-jnp.expm1(2.0 * log_a))
+    gated = mult * i * x.astype(jnp.float32)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    a_scan, y = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    if h0 is not None:
+        # fold the carried state into every step: h_t += (prod a_{<=t}) h0
+        y = y + a_scan * h0[:, None, :]
+    h_last = y[:, -1, :]
+    return y.astype(x.dtype), h_last
+
+
+def rg_lru_step(x: Array, gate_x: Array, gate_a: Array, lam: Array,
+                h: Array) -> tuple[Array, Array]:
+    """One decode step. x, gates: (b, 1, d_rnn); h: (b, d_rnn)."""
+    r = jax.nn.sigmoid(gate_a[:, 0].astype(jnp.float32))
+    i = jax.nn.sigmoid(gate_x[:, 0].astype(jnp.float32))
+    log_a = -RG_C * jax.nn.softplus(lam.astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(-jnp.expm1(2.0 * log_a))
+    h_new = a * h + mult * i * x[:, 0].astype(jnp.float32)
+    return h_new[:, None, :].astype(x.dtype), h_new
+
+
+def causal_conv(x: Array, w: Array, state: Array | None = None
+                ) -> tuple[Array, Array]:
+    """Depthwise causal conv, width CONV_W. x: (b, s, c); w: (CONV_W, c).
+
+    state: (b, CONV_W-1, c) trailing context from the previous call (decode).
+    Returns (y, new_state).
+    """
+    b, s, c = x.shape
+    if state is None:
+        state = jnp.zeros((b, CONV_W - 1, c), x.dtype)
+    ext = jnp.concatenate([state, x], axis=1)
+    y = sum(ext[:, i: i + s, :] * w[i] for i in range(CONV_W))
+    new_state = ext[:, -(CONV_W - 1):, :]
+    return y, new_state

@@ -1,0 +1,383 @@
+"""HLO cost analyzer with while-loop trip-count awareness.
+
+XLA's built-in ``compiled.cost_analysis()`` counts a while body exactly
+once, so any scan-over-layers model is undercounted by ~L (verified in
+EXPERIMENTS.md §Dry-run). This parser rebuilds the cost from the compiled
+(post-SPMD, post-fusion) HLO text with a weighted call-graph traversal:
+
+* ``while`` ops: body + condition costs x trip count, where the trip count
+  is recovered from the loop-bound constant in the condition computation
+  (all our scans are static-length);
+* ``fusion``/``call``/``conditional``: recurse (x1);
+* FLOPs: ``dot`` ops (2 * output_elems * contraction size) — recursing into
+  fusions; matmuls dominate every model here, elementwise flops are noise;
+* HBM bytes: per top-level op = operand bytes + output bytes, treating each
+  post-fusion op as one kernel (the standard post-fusion traffic estimate;
+  fusions are NOT recursed into for bytes);
+* collective bytes: output sizes of all-gather / all-reduce /
+  reduce-scatter / all-to-all / collective-permute (async '-start' counted,
+  '-done' skipped), recursed with the same weights.
+
+The HLO is per-device after SPMD partitioning, so all results are
+per-chip.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1, "s32": 4, "u32": 4,
+    "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z]\w*)\[([\d,]*)\]")
+# op line:  %name = <type> opcode(...), attrs
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*")
+_SCALAR_TYPE_RE = re.compile(
+    r"^([a-z]\w*\[[\d,]*\](?:\{[\d,:TSE()]*\})?)\s+")
+_OPCODE_RE = re.compile(r"^([\w\-]+)\(")
+
+
+def _parse_op_line(line: str):
+    """Robust op-line parse: tuple types may contain '=' inside
+    /*index=N*/ comments, so the type is paren-balanced, not regexed."""
+    m = _NAME_RE.match(line)
+    if not m:
+        return None
+    name = m.group(1)
+    rest = line[m.end():]
+    if rest.startswith("("):            # tuple type: balance parens
+        depth = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        type_str = rest[: i + 1]
+        rest = rest[i + 1:].lstrip()
+    else:
+        mt = _SCALAR_TYPE_RE.match(rest)
+        if not mt:
+            return None
+        type_str = mt.group(1)
+        rest = rest[mt.end():]
+    mo = _OPCODE_RE.match(rest)
+    if not mo:
+        return None
+    return name, type_str, mo.group(1), rest[mo.end():]
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s+->")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CALLED_RE = re.compile(r"called_computations=\{([^}]*)\}")
+_COND_BODY_RE = re.compile(r"condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def shape_elems(shape_str: str) -> int:
+    total = 0
+    for _, dims in _SHAPE_RE.findall(shape_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n
+    return total
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    shape: str
+    opcode: str
+    rest: str          # everything after the opening paren
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: list
+    shapes: dict       # op name -> shape string (includes parameters)
+
+
+def parse_hlo(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        if not line.startswith(" ") and line.endswith("{"):
+            m = _COMP_RE.match(line.strip(" {"))
+            if m:
+                cur = Computation(m.group(1), [], {})
+                comps[cur.name] = cur
+                # parameters: "%p (x: f32[2,3], y: s32[]) -> ..."
+                continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        parsed = _parse_op_line(line)
+        if parsed:
+            name, shape, opcode, rest = parsed
+            cur.ops.append(Op(name, shape, opcode, rest))
+            cur.shapes[name] = shape
+    return comps
+
+
+def _trip_count(cond: Computation) -> int:
+    """Loop bound = the largest integer constant in the condition."""
+    best = 1
+    for op in cond.ops:
+        for c in _CONST_RE.findall(op.rest):
+            best = max(best, int(c))
+        if op.opcode == "constant":
+            m = re.search(r"\((\d+)\)", "(" + op.rest)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def _dot_flops(op: Op, shapes: dict) -> float:
+    out_elems = shape_elems(op.shape)
+    # contraction size: product of lhs contracting dim sizes
+    mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+    operands = _OPERAND_RE.findall(op.rest.split(")")[0])
+    if not operands:
+        return 0.0
+    lhs_shape = shapes.get(operands[0], "")
+    dims = []
+    for _, ds in _SHAPE_RE.findall(lhs_shape):
+        dims = [int(x) for x in ds.split(",") if x]
+        break
+    k = 1
+    if mc and dims:
+        for ci in mc.group(1).split(","):
+            if ci and int(ci) < len(dims):
+                k *= dims[int(ci)]
+    return 2.0 * out_elems * k
+
+
+class HloCost:
+    def __init__(self, text: str):
+        self.comps = parse_hlo(text)
+        self._memo: dict[str, tuple[float, float, dict]] = {}
+        self.entry = None
+        for line in text.splitlines():
+            if line.startswith("ENTRY"):
+                m = re.match(r"ENTRY\s+%?([\w.\-]+)", line)
+                if m:
+                    self.entry = m.group(1)
+                    break
+        if self.entry is None:          # fall back: largest computation
+            self.entry = max(self.comps,
+                             key=lambda n: len(self.comps[n].ops))
+
+    def _op_operand_bytes(self, op: Op, comp: Computation) -> int:
+        total = 0
+        for name in _OPERAND_RE.findall(op.rest.split(")")[0]):
+            total += shape_bytes(comp.shapes.get(name, ""))
+        return total
+
+    def _operand_bytes_list(self, op: Op, comp: Computation) -> list[int]:
+        return [shape_bytes(comp.shapes.get(name, ""))
+                for name in _OPERAND_RE.findall(op.rest.split(")")[0])]
+
+    def _root_opcode(self, comp_name: str) -> str:
+        comp = self.comps.get(comp_name)
+        return comp.ops[-1].opcode if comp and comp.ops else ""
+
+    def _comp_has_op(self, comp_name: str, opcode: str) -> bool:
+        comp = self.comps.get(comp_name)
+        return bool(comp) and any(o.opcode == opcode for o in comp.ops)
+
+    def _kernel_bytes(self, op: Op, comp: Computation,
+                      root_oc: str | None = None,
+                      called: str | None = None) -> float:
+        """Traffic of one (possibly fused) kernel. Slice-shaped ops touch
+        only the slice, not the buffer they index into — a
+        dynamic-update-slice over the scan activation stash reads/writes
+        the update, not the whole (L, b, s, d) buffer; a dynamic-slice
+        fusion reads one layer's worth, not the whole stack."""
+        oc = root_oc or op.opcode
+        out_b = shape_bytes(op.shape)
+        ops_b = self._operand_bytes_list(op, comp)
+        if oc == "dynamic-update-slice" or (
+                called and self._comp_has_op(called,
+                                             "dynamic-update-slice")):
+            big = max(ops_b, default=0)
+            return 2.0 * max(sum(ops_b) - big, 0)
+        if oc == "dynamic-slice":
+            return 2.0 * out_b
+        if called and self._comp_has_op(called, "dynamic-slice"):
+            # clamp any stacked-buffer operand to the slice it reads
+            ops_b = [min(b, out_b) for b in ops_b]
+        return out_b + sum(ops_b)
+
+    def _while_trips(self, op: Op) -> int:
+        m = _TRIP_RE.search(op.rest)
+        if m:                            # XLA records the analyzed bound
+            return int(m.group(1))
+        mcb = _COND_BODY_RE.search(op.rest)
+        if mcb and mcb.group(1) in self.comps:
+            return _trip_count(self.comps[mcb.group(1)])
+        return 1
+
+    def cost(self, comp_name: str | None = None):
+        """Returns (flops, hbm_bytes, collective_bytes_by_kind)."""
+        name = comp_name or self.entry
+        if name in self._memo:
+            return self._memo[name]
+        self._memo[name] = (0.0, 0.0, {})   # cycle guard
+        comp = self.comps.get(name)
+        if comp is None:
+            return 0.0, 0.0, {}
+        flops = 0.0
+        hbm = 0.0
+        coll: dict[str, float] = {}
+
+        def add_coll(cc, mult=1.0):
+            for k, v in cc.items():
+                coll[k] = coll.get(k, 0.0) + v * mult
+
+        for op in comp.ops:
+            oc = op.opcode
+            base = oc.replace("-start", "")
+            if oc.endswith("-done") or oc.endswith("-update-done"):
+                continue
+            if base in COLLECTIVES:
+                coll[base] = coll.get(base, 0.0) + shape_bytes(op.shape)
+                continue
+            if oc == "while":
+                m = _COND_BODY_RE.search(op.rest)
+                if m:
+                    cname, bname = m.groups()
+                    trips = self._while_trips(op)
+                    bf, bh, bc = self.cost(bname)
+                    cf, ch, cc = self.cost(cname)
+                    flops += (bf + cf) * trips
+                    hbm += (bh + ch) * trips
+                    add_coll(bc, trips)
+                    add_coll(cc, trips)
+                continue
+            if oc == "fusion":
+                # one kernel: own operand/output traffic; dots inside count
+                root_oc = ""
+                called = None
+                for cname in _CALLS_RE.findall(op.rest):
+                    cf, _, cc = self.cost(cname)
+                    flops += cf
+                    add_coll(cc)
+                    root_oc = self._root_opcode(cname)
+                    called = cname
+                hbm += self._kernel_bytes(op, comp, root_oc or None, called)
+                continue
+            if oc in ("call", "conditional", "async-start", "custom-call"):
+                # true function call: the callee's ops carry their own cost
+                refs = (_TO_APPLY_RE.findall(op.rest)
+                        + _CALLS_RE.findall(op.rest))
+                for grp in (_BRANCHES_RE.findall(op.rest)
+                            + _CALLED_RE.findall(op.rest)):
+                    refs += _OPERAND_RE.findall(grp)
+                for cname in refs:
+                    cf, ch, cc = self.cost(cname)
+                    flops += cf
+                    hbm += ch
+                    add_coll(cc)
+                continue
+            if oc == "dot":
+                flops += _dot_flops(op, comp.shapes)
+                hbm += shape_bytes(op.shape) + self._op_operand_bytes(op,
+                                                                      comp)
+                continue
+            if oc in ("parameter", "constant", "get-tuple-element", "tuple",
+                      "bitcast", "after-all", "iota"):
+                continue
+            # generic top-level op (incl. reduce/scatter with scalar
+            # to_apply bodies): one kernel's worth of traffic
+            hbm += self._kernel_bytes(op, comp)
+        self._memo[name] = (flops, hbm, coll)
+        return self._memo[name]
+
+
+def analyze_text(text: str) -> tuple[float, float, dict]:
+    """(flops, hbm_bytes, collective_bytes_by_kind) for per-device HLO."""
+    return HloCost(text).cost()
+
+
+def top_bytes_ops(text: str, n: int = 20) -> list[tuple[float, str, str]]:
+    """Debug: the n ops contributing most HBM traffic (trip-weighted)."""
+    hc = HloCost(text)
+    # weight per computation = product of trip counts on the path to entry
+    weights: dict[str, float] = {hc.entry: 1.0}
+    order = [hc.entry]
+    i = 0
+    while i < len(order):
+        name = order[i]
+        i += 1
+        comp = hc.comps.get(name)
+        if comp is None:
+            continue
+        w = weights[name]
+        for op in comp.ops:
+            if op.opcode == "while":
+                m = _COND_BODY_RE.search(op.rest)
+                if m:
+                    t = hc._while_trips(op)
+                    for sub in m.groups():
+                        weights[sub] = weights.get(sub, 0.0) + w * t
+                        order.append(sub)
+            elif op.opcode in ("call", "conditional", "async-start",
+                               "custom-call"):
+                refs = (_TO_APPLY_RE.findall(op.rest)
+                        + _CALLS_RE.findall(op.rest))
+                for sub in refs:
+                    weights[sub] = weights.get(sub, 0.0) + w
+                    order.append(sub)
+    rows = []
+    for name, w in weights.items():
+        comp = hc.comps.get(name)
+        if comp is None:
+            continue
+        for op in comp.ops:
+            if op.opcode in ("parameter", "constant", "get-tuple-element",
+                             "tuple", "bitcast", "after-all", "iota",
+                             "while", "call", "conditional", "async-start",
+                             "custom-call"):
+                continue
+            root_oc = called = None
+            if op.opcode == "fusion":
+                calls = _CALLS_RE.findall(op.rest)
+                if calls:
+                    root_oc, called = hc._root_opcode(calls[0]), calls[0]
+            b = hc._kernel_bytes(op, comp, root_oc, called) * w
+            if b > 0:
+                rows.append((b, f"{name}/{op.name}", op.opcode))
+    rows.sort(reverse=True)
+    return rows[:n]

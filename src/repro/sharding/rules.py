@@ -1,0 +1,219 @@
+"""Partitioning rules: parameter / activation / cache PartitionSpecs per arch.
+
+Axis discipline (DESIGN.md §6):
+* ``model`` — tensor parallelism: attention heads & ffn width, MoE experts
+  (EP), vocab for the embedding/unembedding, sequence dim of decode caches;
+* ``data`` (+ ``pod``) — batch; additionally FSDP/ZeRO sharding of params &
+  optimizer state for the archs too big for pure TP (llama4, dbrx,
+  internvl2) — GSPMD inserts the per-layer all-gathers;
+* ``pod`` — outer data tier; joins FSDP for the 100B+ MoE archs so their
+  optimizer state fits (llama4 train is a multi-pod-only cell, recorded in
+  EXPERIMENTS.md).
+
+Everything here returns *specs*; jit + GSPMD do the actual movement.
+Non-divisible dimensions (e.g. 40 heads on 16-way model axis) are legal:
+GSPMD pads internally.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import ModelConfig
+
+# archs whose params/opt-state additionally shard over the data (and pod)
+# axes — FSDP/ZeRO-3
+FSDP_ARCHS = {"llama4-maverick-400b-a17b", "dbrx-132b", "internvl2-26b"}
+
+
+def batch_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _fsdp_axis(cfg: ModelConfig, mesh: Mesh):
+    if cfg.arch not in FSDP_ARCHS:
+        return None
+    axes = batch_axes(mesh)
+    return axes if len(axes) > 1 else axes[0]
+
+
+def param_specs(cfg: ModelConfig, params: Any, mesh: Mesh) -> Any:
+    """Spec tree matching the param tree structure, by path-name rules."""
+    fsdp = _fsdp_axis(cfg, mesh)
+
+    def rule(path: tuple[str, ...], x) -> P:
+        name = path[-1]
+        nd = x.ndim
+        if name == "embed":
+            return P("model", None)
+        if name == "unembed":
+            return P(None, "model")
+        if "norm" in name:                   # incl. gate_norm, final_norm
+            return P(*([None] * nd))
+        if name in ("wq", "wk", "wv", "in_proj", "w_gate", "w_up",
+                    "w_x", "w_gate_branch", "w_gate_x", "w_gate_a"):
+            if nd == 4:                      # MoE expert: (L, E, d, ff)
+                return P(None, "model", fsdp, None)
+            return P(None, fsdp, "model")    # (L, d, X)
+        if name in ("wo", "w_down", "out_proj", "w_out"):
+            if nd == 4:                      # MoE expert: (L, E, ff, d)
+                return P(None, "model", None, fsdp)
+            return P(None, "model", fsdp)    # (L, X, d)
+        if name in ("bq", "bk", "bv"):
+            return P(None, "model")
+        if name == "w_router":
+            return P(None, None, None)       # small; replicate
+        if name in ("a_log", "dt_bias", "d_skip", "lam"):
+            return P(None, "model")
+        if name == "conv_w":                 # (L, W, channels)
+            return P(None, None, "model")
+        return P(*([None] * nd))
+
+    def walk(path, tree):
+        if isinstance(tree, dict):
+            return {k: walk(path + (k,), v) for k, v in tree.items()}
+        return rule(path, tree)
+
+    return walk((), params)
+
+
+def param_shardings(cfg: ModelConfig, params: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(cfg, params, mesh))
+
+
+def _spec_uses_axes(spec: P, axes: tuple[str, ...]) -> bool:
+    for entry in spec:
+        names = entry if isinstance(entry, tuple) else (entry,)
+        if any(a in axes for a in names if a is not None):
+            return True
+    return False
+
+
+def opt_state_spec_from_param_spec(spec: P, shape: tuple[int, ...],
+                                   mesh: Mesh) -> P:
+    """ZeRO-1: optimizer moments additionally shard their largest
+    unsharded dim over the data axes (GSPMD pads non-divisible dims)."""
+    axes = batch_axes(mesh)
+    if _spec_uses_axes(spec, axes):
+        return spec                                        # already ZeRO'd
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    # find largest dim currently unsharded (skip dim 0 = layer stack)
+    best, best_size = -1, 0
+    for i in range(1, len(shape)):
+        if entries[i] is None and shape[i] > best_size:
+            best, best_size = i, shape[i]
+    if best >= 0 and best_size >= 64:
+        entries[best] = axes if len(axes) > 1 else axes[0]
+    return P(*entries)
+
+
+def opt_state_specs(kind: str, pspecs: Any, pshapes: Any, mesh: Mesh,
+                    compress: bool = False) -> dict:
+    """Spec tree matching optimizer.init(...) structure (ZeRO-1 moments)."""
+    moment = jax.tree.map(
+        lambda s, sh: opt_state_spec_from_param_spec(s, sh.shape, mesh),
+        pspecs, pshapes)
+    out = {"m": moment, "step": P()}
+    if kind == "adafactor":
+        def fac(spec, sh):
+            entries = list(spec) + [None] * (len(sh.shape) - len(spec))
+            if len(sh.shape) >= 2:
+                return {"vr": P(*entries[:-1]),
+                        "vc": P(*(entries[:-2] + entries[-1:]))}
+            return {"v": P(*entries)}
+
+        out["v"] = jax.tree.map(fac, pspecs, pshapes)
+    else:
+        out["v"] = moment
+        if compress:
+            out["residual"] = jax.tree.map(lambda s: s, pspecs)
+    return out
+
+
+def enforce_divisible(spec: P, shape: tuple[int, ...], mesh: Mesh) -> P:
+    """jit input shardings must divide dims exactly (unlike internal
+    constraints, which GSPMD pads). Drop axes that don't divide — e.g. an
+    odd vocab (whisper 51865) falls back to a replicated embedding."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for i, entry in enumerate(entries[: len(shape)]):
+        if entry is None:
+            out.append(None)
+            continue
+        names = entry if isinstance(entry, tuple) else (entry,)
+        n = 1
+        for a in names:
+            n *= mesh.shape[a]
+        out.append(entry if shape[i] % n == 0 else None)
+    return P(*out)
+
+
+def batch_spec(mesh: Mesh) -> P:
+    return P(batch_axes(mesh), None)
+
+
+def activation_spec(mesh: Mesh) -> P:
+    return P(batch_axes(mesh), None, None)
+
+
+def logits_spec(mesh: Mesh) -> P:
+    return P(batch_axes(mesh), None, "model")
+
+
+def kv_cache_spec(mesh: Mesh, batch: int) -> P:
+    """(L, b, s_max, kv, hd): batch over data axes when divisible, the
+    cache sequence over model (sequence-sharded decode)."""
+    axes = batch_axes(mesh)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    if batch % n == 0 and batch >= n:
+        return P(None, axes, "model", None, None)
+    # tiny batch (long_500k b=1): shard sequence over everything
+    return P(None, None, (*axes, "model"), None, None)
+
+
+def ssm_cache_specs(mesh: Mesh, batch: int) -> dict:
+    axes = batch_axes(mesh)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    if batch % n == 0 and batch >= n:
+        return {"ssm": P(None, axes, "model", None, None),
+                "conv": P(None, axes, None, "model")}
+    return {"ssm": P(None, None, "model", None, None),
+            "conv": P(None, None, None, "model")}
+
+
+def cache_specs(cfg: ModelConfig, cache: Any, mesh: Mesh, batch: int) -> Any:
+    """Spec tree matching init_cache(...) structure."""
+    if cfg.kind in ("dense", "moe", "vlm"):
+        kv = kv_cache_spec(mesh, batch)
+        return {"k": kv, "v": kv}
+    if cfg.kind == "ssm":
+        return ssm_cache_specs(mesh, batch)
+    if cfg.kind == "encdec":
+        kv = kv_cache_spec(mesh, batch)
+        return {"k": kv, "v": kv, "xk": kv, "xv": kv}
+    if cfg.kind == "hybrid":
+        kv = kv_cache_spec(mesh, batch)
+        axes = batch_axes(mesh)
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        if batch % n == 0 and batch >= n:
+            rg = {"h": P(None, axes, "model"),
+                  "conv": P(None, axes, None, "model")}
+        else:
+            rg = {"h": P(None, None, "model"),
+                  "conv": P(None, None, None, "model")}
+
+        def per_entry(subtree):
+            return {"k": kv, "v": kv} if "k" in subtree else dict(rg)
+
+        return {k: per_entry(v) for k, v in cache.items()}
+    raise ValueError(cfg.kind)

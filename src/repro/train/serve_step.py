@@ -1,0 +1,47 @@
+"""Serving: prefill + single-token decode steps (the inference shape cells).
+
+``decode_*`` / ``long_*`` cells lower exactly this ``serve_step``: one new
+token against a KV cache (or SSM/RG-LRU state) of the cell's seq_len.
+Sampling is greedy argmax — the serving layer's batching/routing policy is
+out of scope; the compute/memory/collective profile is what the roofline
+reads.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm, whisper
+from repro.models.common import ModelConfig
+
+Array = jax.Array
+
+
+def make_serve_step(cfg: ModelConfig):
+    """Returns serve(params, token, cache, pos) -> (next_token, cache)."""
+
+    def serve(params, token, cache, pos):
+        if cfg.kind == "encdec":
+            logits, cache = whisper.decode_step(cfg, params, token, cache,
+                                                pos)
+        else:
+            logits, cache = lm.decode_step(cfg, params, token, cache, pos)
+        nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return nxt[:, None], cache
+
+    return serve
+
+
+def make_prefill(cfg: ModelConfig):
+    """Returns prefill(params, tokens, aux) -> (hidden, aux_loss) — the
+    prefill_* cells lower the full forward at the cell's seq_len."""
+
+    def prefill(params, tokens, aux=None):
+        if cfg.kind == "encdec":
+            return whisper.forward(cfg, params, tokens, aux)
+        return lm.forward(cfg, params, tokens, aux)
+
+    return prefill

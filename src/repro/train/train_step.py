@@ -1,0 +1,131 @@
+"""Training step: chunked cross-entropy loss, grad accumulation, remat.
+
+The vocab projection is the memory cliff at 32k contexts with 200k vocabs
+(a full (b, s, V) f32 logits tensor is tens of GB), so the loss is computed
+per sequence chunk inside a scan: only (b, chunk, V) is ever live, and the
+unembedding matmul + log-softmax reduce per chunk. GSPMD reduces the
+vocab-sharded logsumexp across the model axis automatically.
+
+Microbatch gradient accumulation (the paper's C4 batched-processing analogue
+at the training level, DESIGN.md §8) splits the per-device batch and scans,
+letting XLA overlap each microbatch's gradient reduce-scatter with the next
+microbatch's backward.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm, whisper
+from repro.models.common import ModelConfig
+from repro.train import optimizer as opt
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    opt: opt.OptConfig = opt.OptConfig()
+    loss_chunk: int = 512
+    microbatches: int = 1
+    remat: bool = True
+    moe_aux_weight: float = 0.01
+    z_loss: float = 1e-4
+
+
+def chunked_ce_loss(cfg: ModelConfig, params: dict, hidden: Array,
+                    targets: Array, chunk: int,
+                    z_loss: float = 0.0) -> Array:
+    """Mean next-token CE over (b, s) hidden/targets, scanned over s-chunks."""
+    b, s, d = hidden.shape
+    n = -(-s // chunk)
+    pad = n * chunk - s
+    hp = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+    tp = jnp.pad(targets, ((0, 0), (0, pad)), constant_values=-1)
+    hp = hp.reshape(b, n, chunk, d).transpose(1, 0, 2, 3)
+    tp = tp.reshape(b, n, chunk).transpose(1, 0, 2)
+    w = lm.unembed_matrix(cfg, params)
+
+    def body(acc, inp):
+        h_c, t_c = inp
+        logits = jnp.einsum("bsd,dv->bsv", h_c, w).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        # iota-compare pick instead of take_along_axis: shards cleanly over
+        # a model-sharded vocab (gather would force bad GSPMD lowerings)
+        cols = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+        picked = jnp.sum(jnp.where(cols == t_c[..., None], logits, 0.0),
+                         axis=-1)
+        valid = (t_c >= 0).astype(jnp.float32)
+        nll = (lse - picked) * valid
+        zl = z_loss * (lse * lse) * valid
+        return (acc[0] + jnp.sum(nll + zl), acc[1] + jnp.sum(valid)), None
+
+    (total, count), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (hp, tp))
+    return total / jnp.maximum(count, 1.0)
+
+
+def loss_fn(cfg: ModelConfig, tcfg: TrainConfig, params: dict,
+            batch: dict) -> Array:
+    tokens = batch["tokens"]
+    aux_in = batch.get("frontend")
+    if cfg.kind == "encdec":
+        hidden, moe_aux = whisper.forward(cfg, params, tokens, aux_in)
+    else:
+        hidden, moe_aux = lm.forward(cfg, params, tokens, aux_in,
+                                     remat=tcfg.remat)
+        if cfg.kind == "vlm" and aux_in is not None:
+            hidden = hidden[:, cfg.frontend_tokens:]
+    # next-token targets; final position has no target
+    targets = jnp.concatenate(
+        [tokens[:, 1:], jnp.full_like(tokens[:, :1], -1)], axis=1)
+    ce = chunked_ce_loss(cfg, params, hidden, targets, tcfg.loss_chunk,
+                         tcfg.z_loss)
+    return ce + tcfg.moe_aux_weight * moe_aux
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig):
+    """Returns step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    Not jitted here — the launcher jits with in/out shardings.
+    """
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(partial(loss_fn, cfg, tcfg))(params, batch)
+
+    def step(params, opt_state, batch):
+        if tcfg.microbatches > 1:
+            mb = tcfg.microbatches
+
+            def split(x):
+                b = x.shape[0]
+                return x.reshape((mb, b // mb) + x.shape[1:])
+
+            micro = {k: split(v) for k, v in batch.items()}
+
+            def body(acc, mbatch):
+                l, g = grads_of(params, mbatch)
+                return (acc[0] + l,
+                        jax.tree.map(jnp.add, acc[1], g)), None
+
+            zero = (jnp.zeros(()),
+                    jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params))
+            (loss, gsum), _ = jax.lax.scan(body, zero, micro)
+            loss = loss / mb
+            grads = jax.tree.map(lambda g: (g / mb).astype(jnp.bfloat16),
+                                 gsum)
+        else:
+            loss, grads = grads_of(params, batch)
+        params, opt_state = opt.update(params, grads, opt_state, tcfg.opt)
+        metrics = {"loss": loss,
+                   "grad_norm": opt._global_norm(grads)}
+        return params, opt_state, metrics
+
+    return step

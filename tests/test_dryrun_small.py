@@ -1,0 +1,62 @@
+"""Dry-run machinery regression at 1-device scale (the 512-device sweep
+runs out-of-process; this guards the lowering path itself)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.launch import dryrun
+from repro.launch.mesh import make_debug_mesh
+
+
+@pytest.mark.parametrize("arch,shape", [
+    ("qwen2-0.5b", "decode_32k"),
+    ("mamba2-2.7b", "long_500k"),
+    ("whisper-base", "prefill_32k"),
+])
+def test_input_specs_and_lowering_smoke(arch, shape, monkeypatch):
+    """Reduced configs through the real input_specs/lower_cell path."""
+    mesh = make_debug_mesh(data=1, model=1)
+    small_shapes = {
+        "train_4k": dict(kind="train", seq=64, batch=2),
+        "prefill_32k": dict(kind="prefill", seq=64, batch=2),
+        "decode_32k": dict(kind="decode", seq=64, batch=2),
+        "long_500k": dict(kind="decode", seq=128, batch=1),
+    }
+    monkeypatch.setattr(dryrun, "SHAPES", small_shapes)
+    monkeypatch.setattr(dryrun, "get_config", get_smoke_config)
+    cfg = get_smoke_config(arch)
+    lowered, chips, mflops = dryrun.lower_cell(cfg, shape, mesh)
+    compiled = lowered.compile()          # must compile on 1 device
+    assert chips == 1
+    assert mflops > 0
+    assert compiled.memory_analysis() is not None
+
+
+def test_optimize_cfg_is_shape_gated():
+    mesh = make_debug_mesh(data=1, model=1)
+    cfg = get_smoke_config("qwen2-0.5b")
+    short = dryrun.optimize_cfg(cfg, mesh, "train_4k")
+    long_ = dryrun.optimize_cfg(cfg, mesh, "prefill_32k")
+    assert short.attn_dp_only and not long_.attn_dp_only
+    assert long_.tp_size == mesh.shape["model"]
+    assert short.attn_p_bf16 and long_.attn_p_bf16
+
+
+def test_skip_reason_matches_subquadratic_rule():
+    for arch, skip in [("qwen2-0.5b", True), ("mamba2-2.7b", False),
+                       ("recurrentgemma-2b", False), ("gemma-7b", True)]:
+        cfg = get_smoke_config(arch)
+        reason = dryrun.skip_reason(cfg, "long_500k")
+        assert (reason is not None) == skip, arch
+        assert dryrun.skip_reason(cfg, "train_4k") is None
+
+
+def test_model_flops_accounting():
+    cfg = get_smoke_config("llama4-maverick-400b-a17b")
+    assert cfg.num_active_params() < cfg.num_params()
+    dense = get_smoke_config("qwen2-7b")
+    assert dense.num_active_params() == dense.num_params()

@@ -1,0 +1,66 @@
+"""Flash-attention Pallas kernel vs naive oracle, swept over shapes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention_pallas
+
+
+def _ref(q, k, v, causal, window):
+    hd = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q, k) * hd ** -0.5
+    sq, skv = q.shape[1], k.shape[1]
+    qp = jnp.arange(sq)[:, None]
+    kp = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= kp <= qp
+    if window:
+        mask &= kp > qp - window
+    s = jnp.where(mask[None], s, -1e30)
+    return jnp.einsum("bqk,bkd->bqd", jax.nn.softmax(s, -1), v)
+
+
+@pytest.mark.parametrize("bh,sq,skv,hd", [(4, 1024, 1024, 64),
+                                          (2, 512, 512, 128),
+                                          (3, 512, 1024, 64),
+                                          (1, 256, 2048, 128)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_matches_naive(bh, sq, skv, hd, causal):
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.normal(size=(bh, sq, hd)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(bh, skv, hd)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(bh, skv, hd)).astype(np.float32))
+    got = flash_attention_pallas(q, k, v, causal=causal, block_q=256,
+                                 block_k=256)
+    want = _ref(q, k, v, causal, 0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("window", [128, 256])
+def test_flash_sliding_window(window):
+    rng = np.random.default_rng(2)
+    q = jnp.asarray(rng.normal(size=(2, 512, 64)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(2, 512, 64)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(2, 512, 64)).astype(np.float32))
+    got = flash_attention_pallas(q, k, v, causal=True, window=window,
+                                 block_q=128, block_k=128)
+    want = _ref(q, k, v, True, window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_bf16_io():
+    rng = np.random.default_rng(3)
+    q = jnp.asarray(rng.normal(size=(2, 256, 64))).astype(jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(2, 256, 64))).astype(jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(2, 256, 64))).astype(jnp.bfloat16)
+    got = flash_attention_pallas(q, k, v, block_q=128, block_k=128)
+    want = _ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                v.astype(jnp.float32), True, 0)
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want), rtol=3e-2, atol=3e-2)

@@ -1,0 +1,208 @@
+"""Unit tests for the PIC-MC substrate: fields, particles, mover, cycle."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fields, mover, pic
+from repro.core.grid import Grid1D, deposit, gather, gather_onehot
+from repro.core.particles import (SpeciesBuffer, compact, counts_per_cell,
+                                  free_slots, init_uniform, inject, kill,
+                                  make_species, sort_by_cell)
+
+
+# ---------------------------------------------------------------- fields
+def test_poisson_matches_dense_solve():
+    ng, dx = 65, 0.25
+    rng = np.random.default_rng(0)
+    rho = jnp.asarray(rng.normal(size=ng).astype(np.float32))
+    phi = fields.solve_poisson(rho, dx, 1.0, 0.5, -1.5)
+    a = np.zeros((ng, ng))
+    b = np.zeros(ng)
+    a[0, 0] = 1
+    b[0] = 0.5
+    a[-1, -1] = 1
+    b[-1] = -1.5
+    for i in range(1, ng - 1):
+        a[i, i - 1] = -1
+        a[i, i] = 2
+        a[i, i + 1] = -1
+        b[i] = np.asarray(rho)[i] * dx * dx
+    ref = np.linalg.solve(a, b)
+    np.testing.assert_allclose(np.asarray(phi), ref, atol=5e-6)
+
+
+def test_poisson_quadratic_exact():
+    # rho = const -> phi quadratic; the discrete solve is exact for this
+    ng, dx = 33, 0.5
+    rho = jnp.full((ng,), 2.0)
+    phi = fields.solve_poisson(rho, dx, 1.0, 0.0, 0.0)
+    xs = np.arange(ng) * dx
+    L = (ng - 1) * dx
+    ref = xs * (L - xs)  # -phi'' = 2 with zero walls
+    np.testing.assert_allclose(np.asarray(phi), ref, rtol=1e-5, atol=1e-4)
+
+
+def test_thomas_tridiagonal():
+    rng = np.random.default_rng(1)
+    n = 50
+    dl = np.r_[0, rng.normal(size=n - 1)].astype(np.float32)
+    du = np.r_[rng.normal(size=n - 1), 0].astype(np.float32)
+    d = (4 + rng.random(n)).astype(np.float32)
+    b = rng.normal(size=n).astype(np.float32)
+    t = np.diag(d) + np.diag(dl[1:], -1) + np.diag(du[:-1], 1)
+    x = fields.thomas(*map(jnp.asarray, (dl, d, du, b)))
+    np.testing.assert_allclose(np.asarray(x), np.linalg.solve(t, b),
+                               atol=1e-5)
+
+
+def test_smoother_conserves_integral():
+    rng = np.random.default_rng(2)
+    f = jnp.asarray(rng.random(101).astype(np.float32))
+    s = fields.smooth_binomial(f, 5)
+    np.testing.assert_allclose(float(f.sum()), float(s.sum()), rtol=1e-5)
+    # smoothing reduces total variation
+    tv = lambda a: float(jnp.abs(jnp.diff(a)).sum())  # noqa: E731
+    assert tv(s) < tv(f)
+
+
+# ---------------------------------------------------------------- particles
+def test_inject_fills_dead_slots_and_counts_drops():
+    buf = make_species(16)
+    buf = dataclasses.replace(buf, alive=jnp.arange(16) < 14)  # 2 free slots
+    x = jnp.arange(4.0)
+    v = jnp.ones((4, 3))
+    w = jnp.ones(4)
+    mask = jnp.array([True, True, True, False])
+    out, dropped = inject(buf, x, v, w, mask)
+    assert int(out.count()) == 16          # 14 + 2 accepted
+    assert int(dropped) == 1               # third candidate had no slot
+
+
+def test_kill_then_inject_roundtrip():
+    key = jax.random.PRNGKey(0)
+    buf = init_uniform(key, 64, 64, 10.0, 1.0)
+    buf = kill(buf, jnp.arange(64) % 2 == 0)
+    assert int(buf.count()) == 32
+    slots = free_slots(buf, 32)
+    assert (np.asarray(slots) < 64).all()
+    out, dropped = inject(buf, jnp.zeros(32), jnp.zeros((32, 3)),
+                          jnp.ones(32), jnp.ones(32, bool))
+    assert int(out.count()) == 64 and int(dropped) == 0
+
+
+def test_sort_by_cell_groups_and_preserves_multiset():
+    key = jax.random.PRNGKey(1)
+    buf = init_uniform(key, 256, 200, 16.0, 1.0)
+    s = sort_by_cell(buf, 1.0, 16)
+    assert int(s.count()) == int(buf.count())
+    np.testing.assert_allclose(sorted(np.asarray(buf.x[buf.alive])),
+                               sorted(np.asarray(s.x[s.alive])), rtol=1e-6)
+    cells = np.floor(np.asarray(s.x[s.alive])).astype(int)
+    assert (np.diff(cells) >= 0).all()     # grouped by cell
+    # dead at the tail
+    alive = np.asarray(s.alive)
+    assert not alive[np.argmin(alive):].any()
+
+
+def test_counts_per_cell_sums_to_population():
+    key = jax.random.PRNGKey(2)
+    buf = init_uniform(key, 512, 300, 32.0, 1.0)
+    counts = counts_per_cell(buf, 1.0, 32)
+    assert int(counts.sum()) == 300
+
+
+# ---------------------------------------------------------------- grid ops
+def test_deposit_gather_adjoint_property():
+    # sum_p w_p * gather(f)_p == sum_g f_g * deposit(w)_g * dx  (CIC adjoint)
+    key = jax.random.PRNGKey(3)
+    g = Grid1D(nc=32, dx=0.5)
+    buf = init_uniform(key, 128, 128, g.length, 1.0)
+    f = jax.random.normal(jax.random.PRNGKey(4), (g.ng,))
+    lhs = float(jnp.sum(buf.w * gather(g, f, buf.x)))
+    rho = deposit(g, buf, 1.0)
+    rhs = float(jnp.sum(f * rho) * g.dx)
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-4)
+
+
+def test_gather_onehot_matches_take():
+    key = jax.random.PRNGKey(5)
+    g = Grid1D(nc=64, dx=0.25)
+    buf = init_uniform(key, 256, 256, g.length, 1.0)
+    f = jax.random.normal(jax.random.PRNGKey(6), (g.ng,))
+    np.testing.assert_allclose(np.asarray(gather(g, f, buf.x)),
+                               np.asarray(gather_onehot(g, f, buf.x)),
+                               rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------- mover
+@pytest.mark.parametrize("strategy", ["unified", "explicit", "async_batched"])
+def test_mover_strategies_agree(strategy):
+    key = jax.random.PRNGKey(7)
+    g = Grid1D(nc=128, dx=1.0)
+    buf = init_uniform(key, 4096, 4000, g.length, 1.0)
+    e = jax.random.normal(jax.random.PRNGKey(8), (g.ng,))
+    ref_out, ref_d = mover.push(buf, e, g, -1.0, 0.1, strategy="unified",
+                                boundary="periodic")
+    out, d = mover.push(buf, e, g, -1.0, 0.1, strategy=strategy,
+                        boundary="periodic")
+    np.testing.assert_allclose(np.asarray(out.x), np.asarray(ref_out.x),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(out.v), np.asarray(ref_out.v),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_boris_pure_b_preserves_speed():
+    v = jax.random.normal(jax.random.PRNGKey(9), (512, 3))
+    e = jnp.zeros(512)
+    v2 = mover.boris_kick(v, e, 0.3, b=(0.0, 0.0, 2.0))
+    np.testing.assert_allclose(np.asarray(jnp.linalg.norm(v, axis=-1)),
+                               np.asarray(jnp.linalg.norm(v2, axis=-1)),
+                               rtol=1e-5)
+
+
+def test_absorbing_walls_report_power():
+    g = Grid1D(nc=16, dx=1.0)
+    x = jnp.asarray([0.1, 15.9, 8.0])
+    v = jnp.asarray([[-5.0, 0, 0], [5.0, 0, 0], [0.1, 0, 0]])
+    buf = SpeciesBuffer(x=x, v=v, w=jnp.ones(3), alive=jnp.ones(3, bool))
+    out, diag = mover.push(buf, jnp.zeros(g.ng), g, 1.0, 0.1,
+                           strategy="unified", boundary="absorb")
+    assert int(diag["absorbed_left"]) == 1
+    assert int(diag["absorbed_right"]) == 1
+    assert int(out.count()) == 1
+    assert float(diag["power_left"]) > 0
+
+
+# ---------------------------------------------------------------- cycle
+def test_full_cycle_runs_and_conserves_energy_roughly():
+    sp = (
+        pic.SpeciesConfig("e", -1.0, 1.0, 4096, 4096, vth=0.5,
+                          weight=128 / 4096.0),
+        pic.SpeciesConfig("i", 1.0, 1836.0, 4096, 4096, vth=0.01,
+                          weight=128 / 4096.0),
+    )
+    cfg = pic.PICConfig(nc=128, dx=1.0, dt=0.1, species=sp, field_solve=True)
+    final, diags = jax.jit(lambda s: pic.run(cfg, 50, state=s))(
+        pic.init_state(cfg, 0))
+    tot = (np.asarray(diags["e/ke"]) + np.asarray(diags["i/ke"]) +
+           np.asarray(diags["field_energy"]))
+    assert not np.isnan(tot).any()
+    assert abs(tot[-1] - tot[0]) / tot[0] < 0.05
+
+
+def test_subcycling_stride_freezes_species_between_pushes():
+    sp = (pic.SpeciesConfig("n", 0.0, 1.0, 256, 256, vth=1.0, stride=4),)
+    cfg = pic.PICConfig(nc=64, dx=1.0, dt=0.1, species=sp, field_solve=False)
+    state = pic.init_state(cfg, 0)
+    step = pic.make_step(cfg)
+    x0 = np.asarray(state.species[0].x)
+    state, _ = step(state)      # step 0: pushed (0 % 4 == 0)
+    x1 = np.asarray(state.species[0].x)
+    assert not np.allclose(x0, x1)
+    state, _ = step(state)      # step 1: frozen
+    x2 = np.asarray(state.species[0].x)
+    np.testing.assert_allclose(x1, x2)

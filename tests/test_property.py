@@ -1,0 +1,127 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import fields, mover
+from repro.core.grid import Grid1D, deposit, gather
+from repro.core.particles import (SpeciesBuffer, compact, inject,
+                                  init_uniform, kill, sort_by_cell)
+from repro.train.optimizer import compress_with_feedback, quantize_int8
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(16, 200), nc=st.integers(4, 64),
+       seed=st.integers(0, 2 ** 16))
+def test_deposit_conserves_charge(n, nc, seed):
+    """integral(rho dx) == total charge, for any population and grid."""
+    g = Grid1D(nc=nc, dx=0.5)
+    buf = init_uniform(jax.random.PRNGKey(seed), 256, n, g.length, 1.0)
+    rho = deposit(g, buf, charge=-1.0)
+    np.testing.assert_allclose(float(jnp.sum(rho) * g.dx),
+                               float(-jnp.sum(buf.w * buf.alive)),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2 ** 16), nc=st.integers(4, 64))
+def test_gather_of_constant_field_is_constant(seed, nc):
+    g = Grid1D(nc=nc, dx=1.0)
+    buf = init_uniform(jax.random.PRNGKey(seed), 128, 128, g.length, 1.0)
+    f = jnp.full((g.ng,), 3.25)
+    np.testing.assert_allclose(np.asarray(gather(g, f, buf.x)), 3.25,
+                               rtol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2 ** 16),
+       dt=st.floats(0.01, 0.5),
+       bz=st.floats(-2.0, 2.0))
+def test_boris_rotation_preserves_energy(seed, dt, bz):
+    """With E=0, any B only rotates velocities: |v| is invariant."""
+    v = jax.random.normal(jax.random.PRNGKey(seed), (64, 3))
+    v2 = mover.boris_kick(v, jnp.zeros(64), -1.0 * dt, b=(0.0, 0.0, bz))
+    np.testing.assert_allclose(np.asarray(jnp.linalg.norm(v, axis=-1)),
+                               np.asarray(jnp.linalg.norm(v2, axis=-1)),
+                               rtol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2 ** 16), frac=st.floats(0.0, 1.0))
+def test_kill_inject_population_accounting(seed, frac):
+    """kill(m) then inject(k) always yields count = n - m + accepted."""
+    key = jax.random.PRNGKey(seed)
+    buf = init_uniform(key, 128, 100, 10.0, 1.0)
+    mask = (jax.random.uniform(key, (128,)) < frac) & buf.alive
+    killed = int(jnp.sum(mask))
+    buf = kill(buf, mask)
+    assert int(buf.count()) == 100 - killed
+    m = 64
+    cand_mask = jnp.arange(m) < 40
+    out, dropped = inject(buf, jnp.full((m,), 5.0), jnp.zeros((m, 3)),
+                          jnp.ones((m,)), cand_mask)
+    accepted = 40 - int(dropped)
+    assert int(out.count()) == 100 - killed + accepted
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2 ** 16))
+def test_sort_and_compact_preserve_population(seed):
+    key = jax.random.PRNGKey(seed)
+    buf = init_uniform(key, 128, 77, 16.0, 1.0)
+    for xform in (lambda b: sort_by_cell(b, 1.0, 16), compact):
+        out = xform(buf)
+        assert int(out.count()) == 77
+        np.testing.assert_allclose(
+            np.sort(np.asarray(out.x[out.alive])),
+            np.sort(np.asarray(buf.x[buf.alive])), rtol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2 ** 16), ng=st.integers(8, 128))
+def test_poisson_residual_is_zero(seed, ng):
+    """The cumsum solver satisfies the discrete equation exactly."""
+    rho = jax.random.normal(jax.random.PRNGKey(seed), (ng,))
+    dx = 0.3
+    phi = fields.solve_poisson(rho, dx, 1.0, 0.2, -0.4)
+    lap = (phi[:-2] - 2 * phi[1:-1] + phi[2:]) / (dx * dx)
+    np.testing.assert_allclose(np.asarray(-lap), np.asarray(rho[1:-1]),
+                               rtol=2e-3, atol=2e-3)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2 ** 16), scale=st.floats(1e-6, 1e3))
+def test_int8_quantization_bounded_error(seed, scale):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (256,)) * scale
+    q, s = quantize_int8(x)
+    err = np.abs(np.asarray(x) - np.asarray(q, np.float32) * float(s))
+    assert err.max() <= float(s) * 0.5 + 1e-9 * scale
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2 ** 16), steps=st.integers(1, 30))
+def test_error_feedback_residual_bounded(seed, steps):
+    """Residual never exceeds one quantization step of the carried value."""
+    g = jax.random.normal(jax.random.PRNGKey(seed), (64,)) * 1e-3
+    residual = jnp.zeros_like(g)
+    for _ in range(steps):
+        d, residual = compress_with_feedback(g, residual)
+        q, s = quantize_int8(g + 0 * residual)
+    assert float(jnp.abs(residual).max()) <= float(s) + 1e-8
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2 ** 16), passes=st.integers(1, 6))
+def test_smoother_is_contraction(seed, passes):
+    f = jax.random.normal(jax.random.PRNGKey(seed), (65,))
+    s = fields.smooth_binomial(f, passes)
+    tv = lambda a: float(jnp.abs(jnp.diff(a)).sum())  # noqa: E731
+    assert tv(s) <= tv(f) + 1e-5
+    np.testing.assert_allclose(float(s.sum()), float(f.sum()), rtol=1e-4,
+                               atol=1e-4)

@@ -1,0 +1,103 @@
+"""Sharding rules + HLO cost parser unit tests (1-device scale)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_smoke_config
+from repro.launch.mesh import domain_axes, make_debug_mesh
+from repro.models.registry import build
+from repro.roofline.hlo_parser import analyze_text, shape_bytes
+from repro.sharding import rules
+
+
+def test_param_specs_cover_tree_exactly():
+    mesh = make_debug_mesh(1, 1)
+    for arch in ("qwen2-0.5b", "llama4-maverick-400b-a17b", "mamba2-2.7b",
+                 "recurrentgemma-2b", "whisper-base"):
+        cfg = get_smoke_config(arch)
+        m = build(cfg)
+        shapes = jax.eval_shape(m.init_params, jax.random.PRNGKey(0))
+        specs = rules.param_specs(cfg, shapes, mesh)
+        assert (jax.tree.structure(shapes, is_leaf=lambda x: hasattr(
+            x, "shape")) == jax.tree.structure(
+                specs, is_leaf=lambda x: isinstance(x, P)))
+        # every spec has rank <= param rank
+        def check(sh, sp):
+            assert len(sp) <= len(sh.shape), (sh, sp)
+        jax.tree.map(check, shapes, specs,
+                     is_leaf=lambda x: isinstance(x, P) or hasattr(x,
+                                                                   "shape"))
+
+
+def test_enforce_divisible_drops_bad_axes():
+    mesh = make_debug_mesh(data=1, model=1)
+    # model axis size 1 divides anything; fabricate a 16-way check by name
+    from repro.launch.mesh import make_debug_mesh as _m
+    spec = rules.enforce_divisible(P("model", None), (51865, 512), mesh)
+    assert spec == P("model", None)       # 1-way always divides
+    # simulate: shape not divisible by axis -> dropped (axis size >1 needs
+    # multiple devices; covered in the dry-run itself on 512 devices)
+
+
+def test_opt_state_spec_shapes():
+    mesh = make_debug_mesh(1, 1)
+    spec = rules.opt_state_spec_from_param_spec(P(None, "model"),
+                                                (24, 4096), mesh)
+    assert len(spec) == 2
+
+
+def test_shape_bytes_parses_tuples_and_layouts():
+    assert shape_bytes("f32[2,3]{1,0}") == 24
+    assert shape_bytes("(s32[], bf16[4,4]{1,0}, pred[8])") == 4 + 32 + 8
+    assert shape_bytes("bf16[24,16,4096,896]") == 24 * 16 * 4096 * 896 * 2
+
+
+def test_hlo_parser_counts_scan_trips_exactly():
+    def scanned(w):
+        def body(x, _):
+            return x @ w, None
+        out, _ = jax.lax.scan(body, w, None, length=13)
+        return out
+
+    c = jax.jit(scanned).lower(jnp.ones((32, 32))).compile()
+    flops, hbm, coll = analyze_text(c.as_text())
+    assert abs(flops - 13 * 2 * 32 ** 3) < 1
+    assert coll == {}
+
+
+def test_hlo_parser_counts_collectives_with_trips():
+    mesh = make_debug_mesh(data=1, model=1)
+
+    def f(x):
+        def body(c, _):
+            return jax.lax.with_sharding_constraint(
+                c @ c, jax.sharding.NamedSharding(mesh, P(None, None))), None
+        out, _ = jax.lax.scan(body, x, None, length=3)
+        return out
+
+    with mesh:
+        c = jax.jit(f).lower(jnp.ones((16, 16))).compile()
+    flops, _, _ = analyze_text(c.as_text())
+    assert abs(flops - 3 * 2 * 16 ** 3) < 1
+
+
+def test_domain_axes_selection():
+    assert domain_axes(make_debug_mesh(data=1, model=1)) == ("data",)
+    assert domain_axes(make_debug_mesh(data=1, model=1, pod=1)) == (
+        "pod", "data")
+
+
+def test_cache_specs_match_cache_tree():
+    mesh = make_debug_mesh(1, 1)
+    for arch in ("qwen2-0.5b", "mamba2-2.7b", "recurrentgemma-2b",
+                 "whisper-base"):
+        cfg = get_smoke_config(arch)
+        m = build(cfg)
+        cache = jax.eval_shape(lambda: m.init_cache(4, 64))
+        specs = rules.cache_specs(cfg, cache, mesh, 4)
+        jax.tree.map(lambda sds, sp: None, cache, specs,
+                     is_leaf=lambda x: isinstance(x, P) or hasattr(
+                         x, "shape"))  # structure match or raises

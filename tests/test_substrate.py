@@ -1,0 +1,171 @@
+"""Substrate integration: optimizer, data, checkpoint/restart, elastic."""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt.checkpoint import Checkpointer
+from repro.configs import get_smoke_config
+from repro.data.pipeline import DataConfig, synthetic_batch, synthetic_shard
+from repro.models.registry import build
+from repro.runtime import elastic
+from repro.runtime.fault_tolerance import (FailureInjector, SimulatedFailure,
+                                           resume_training, run_training)
+from repro.train import optimizer as opt
+from repro.train.train_step import TrainConfig, make_train_step
+
+ARCH = "qwen2-0.5b"
+
+
+def _setup(microbatches=1, opt_kind="adamw", compress=False):
+    cfg = get_smoke_config(ARCH)
+    m = build(cfg)
+    params = m.init_params(jax.random.PRNGKey(0))
+    tcfg = TrainConfig(
+        opt=opt.OptConfig(kind=opt_kind, lr=1e-3, compress_grads=compress,
+                          warmup_steps=2),
+        loss_chunk=16, microbatches=microbatches, remat=True)
+    dcfg = DataConfig(seed=7, global_batch=4, seq_len=32)
+    step_fn = jax.jit(make_train_step(cfg, tcfg))
+    batch_fn = lambda step: synthetic_batch(dcfg, cfg, step)  # noqa: E731
+    state = opt.init(params, tcfg.opt)
+    return cfg, params, state, step_fn, batch_fn
+
+
+# ------------------------------------------------------------------ train
+def test_loss_decreases_over_steps():
+    cfg, params, state, step_fn, batch_fn = _setup()
+    losses = []
+    for s in range(12):
+        params, state, metrics = step_fn(params, state, batch_fn(0))
+        losses.append(float(metrics["loss"]))     # same batch: must overfit
+    assert losses[-1] < losses[0] - 0.5, losses
+
+
+@pytest.mark.parametrize("opt_kind", ["adamw", "adafactor"])
+def test_optimizers_make_finite_progress(opt_kind):
+    cfg, params, state, step_fn, batch_fn = _setup(opt_kind=opt_kind)
+    for s in range(3):
+        params, state, metrics = step_fn(params, state, batch_fn(s))
+        assert np.isfinite(metrics["loss"])
+
+
+def test_microbatch_accumulation_matches_full_batch():
+    cfg, p1, s1, step1, batch_fn = _setup(microbatches=1)
+    _, p2, s2, step2, _ = _setup(microbatches=2)
+    b = batch_fn(0)
+    p1n, _, m1 = step1(p1, s1, b)
+    p2n, _, m2 = step2(p2, s2, b)
+    # same initial params; grads averaged over microbatches == full-batch
+    d = jax.tree.map(lambda a, b: float(jnp.abs(a.astype(jnp.float32)
+                                                - b.astype(jnp.float32)).max()),
+                     p1n, p2n)
+    assert max(jax.tree.leaves(d)) < 5e-2, m1["loss"]
+
+
+def test_gradient_compression_error_feedback():
+    # with error feedback the quantization error is carried, not lost:
+    # sum of delivered grads over steps tracks the sum of true grads
+    g = jnp.linspace(-1e-3, 1e-3, 128)
+    residual = jnp.zeros_like(g)
+    delivered = jnp.zeros_like(g)
+    for _ in range(50):
+        d, residual = opt.compress_with_feedback(g, residual)
+        delivered += d
+    np.testing.assert_allclose(np.asarray(delivered / 50), np.asarray(g),
+                               atol=1e-6)
+
+
+def test_compressed_training_still_converges():
+    cfg, params, state, step_fn, batch_fn = _setup(compress=True)
+    losses = []
+    for s in range(12):
+        params, state, metrics = step_fn(params, state, batch_fn(0))
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0] - 0.5
+
+
+# ------------------------------------------------------------------- data
+def test_data_pipeline_deterministic_and_sharded():
+    cfg = get_smoke_config(ARCH)
+    d4 = DataConfig(seed=3, global_batch=8, seq_len=16, num_shards=4)
+    d2 = DataConfig(seed=3, global_batch=8, seq_len=16, num_shards=2)
+    b1 = synthetic_batch(d4, cfg, step=5)
+    b2 = synthetic_batch(d4, cfg, step=5)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    # different steps differ
+    b3 = synthetic_batch(d4, cfg, step=6)
+    assert not np.array_equal(b1["tokens"], b3["tokens"])
+    # shards are independent slices: shard i reproducible in isolation
+    s2 = synthetic_shard(d4, cfg, step=5, shard=2)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"][4:6]),
+                                  np.asarray(s2["tokens"]))
+
+
+# ------------------------------------------------- checkpoint / restart
+def test_checkpoint_roundtrip_and_latest():
+    with tempfile.TemporaryDirectory() as tmp:
+        ck = Checkpointer(tmp)
+        tree = {"a": jnp.arange(5.0), "b": {"c": jnp.ones((2, 3),
+                                                          jnp.bfloat16)}}
+        ck.save(3, tree, blocking=True)
+        ck.save(7, tree, blocking=True)
+        assert ck.latest_step() == 7
+        step, out = ck.restore(like=tree)
+        assert step == 7
+        np.testing.assert_array_equal(out["a"], tree["a"])
+        assert out["b"]["c"].dtype == jnp.bfloat16
+
+
+def test_torn_checkpoint_is_ignored():
+    with tempfile.TemporaryDirectory() as tmp:
+        ck = Checkpointer(tmp)
+        ck.save(3, {"a": jnp.ones(2)}, blocking=True)
+        # simulate a crash mid-write of step 9: npz exists, no manifest
+        os.makedirs(os.path.join(tmp, "step_00000009"), exist_ok=True)
+        with open(os.path.join(tmp, "step_00000009", "arrays.npz"),
+                  "wb") as f:
+            f.write(b"torn")
+        assert ck.latest_step() == 3
+
+
+def test_failure_restart_is_bit_exact():
+    cfg, params0, state0, step_fn, batch_fn = _setup()
+    with tempfile.TemporaryDirectory() as tmp:
+        # uninterrupted reference run
+        ck_ref = Checkpointer(os.path.join(tmp, "ref"))
+        p_ref, s_ref, _ = run_training(
+            step_fn, batch_fn, params0, state0, num_steps=10, ckpt=ck_ref,
+            ckpt_every=4)
+        # interrupted run: fails at step 7 (after the step-8 fence? no:
+        # fence at steps 4 and 8 -> failure at 7 restarts from step 4)
+        ck = Checkpointer(os.path.join(tmp, "crash"))
+        inj = FailureInjector(fail_at_step=7)
+        with pytest.raises(SimulatedFailure):
+            run_training(step_fn, batch_fn, params0, state0, num_steps=10,
+                         ckpt=ck, ckpt_every=4, injector=inj)
+        like = {"params": params0, "opt": state0}
+        p_res, s_res, _ = resume_training(
+            step_fn, batch_fn, num_steps=10, ckpt=ck, ckpt_every=4,
+            like=like)
+        diffs = jax.tree.map(
+            lambda a, b: np.asarray(a.astype(jnp.float32)
+                                    == b.astype(jnp.float32)).all(),
+            p_ref, p_res)
+        assert all(jax.tree.leaves(diffs)), "restart diverged from reference"
+
+
+# ---------------------------------------------------------------- elastic
+def test_elastic_reshard_roundtrip_preserves_values():
+    from jax.sharding import PartitionSpec as P
+    from repro.launch.mesh import make_debug_mesh
+    mesh = make_debug_mesh(data=1, model=1)
+    state = {"w": jnp.arange(64.0).reshape(8, 8)}
+    spec = {"w": P("data", "model")}
+    out = elastic.reshard_via_checkpoint(state, spec, mesh)
+    np.testing.assert_array_equal(np.asarray(out["w"]),
+                                  np.asarray(state["w"]))

@@ -1,0 +1,70 @@
+"""Full bounded-plasma cycle: absorbing walls + SEE + elastic collisions.
+
+The bounded two-wall configuration is BIT1's native geometry (plasma
+confined between conducting walls, §2 of the paper); this exercises the
+cycle pieces the ionization benchmark leaves off.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import collisions, pic
+from repro.core.grid import Grid1D, deposit_density
+from repro.core.particles import init_uniform
+
+
+def test_bounded_plasma_with_see_reaches_population_balance():
+    sp = (
+        pic.SpeciesConfig("e", -1.0, 1.0, 8192, 4096, vth=1.0),
+        pic.SpeciesConfig("i", 1.0, 1836.0, 8192, 4096, vth=0.02),
+    )
+    cfg = pic.PICConfig(
+        nc=128, dx=1.0, dt=0.2, species=sp, field_solve=False,
+        boundary="absorb",
+        wall_emission=((0, 0),),       # electrons re-emit electrons (SEE)
+        emission_yield=0.8, emission_vth=0.5)
+    state = pic.init_state(cfg, 3)
+    step = pic.make_step(cfg)
+    emitted = absorbed = 0
+    for _ in range(30):
+        state, diag = step(state)
+        emitted += int(diag["e/emitted"])
+        absorbed += int(diag["e/absorbed_left"]) + int(
+            diag["e/absorbed_right"])
+    assert absorbed > 100, "walls should absorb fast electrons"
+    # yield 0.8: emitted tracks absorbed
+    assert 0.6 * absorbed < emitted < 0.95 * absorbed, (emitted, absorbed)
+    # with SEE the electron population decays slower than pure absorption
+    n_e = int(np.asarray(state.species[0].count()))
+    assert n_e > 4096 - absorbed  # some losses refilled
+
+
+def test_elastic_scatter_preserves_speed_and_count():
+    key = jax.random.PRNGKey(0)
+    g = Grid1D(nc=64, dx=1.0)
+    buf = init_uniform(key, 2048, 2048, g.length, vth=1.0)
+    density = jnp.full((g.ng,), 5.0)
+    out = collisions.elastic_scatter(jax.random.PRNGKey(1), buf, density, g,
+                                     rate=0.5, dt=1.0)
+    assert int(out.count()) == 2048
+    np.testing.assert_allclose(
+        np.asarray(jnp.linalg.norm(out.v, axis=-1)),
+        np.asarray(jnp.linalg.norm(buf.v, axis=-1)), rtol=1e-5)
+    # with P = 1 - exp(-5*0.5) ~ 0.92, most velocities changed direction
+    changed = (np.abs(np.asarray(out.v - buf.v)) > 1e-6).any(axis=1)
+    assert changed.mean() > 0.7
+
+
+def test_elastic_scatter_isotropy():
+    key = jax.random.PRNGKey(5)
+    g = Grid1D(nc=16, dx=1.0)
+    buf = init_uniform(key, 8192, 8192, g.length, vth=1.0)
+    density = jnp.full((g.ng,), 100.0)     # P ~ 1: everyone scatters
+    out = collisions.elastic_scatter(jax.random.PRNGKey(6), buf, density, g,
+                                     rate=1.0, dt=1.0)
+    dirs = np.asarray(out.v) / np.linalg.norm(np.asarray(out.v), axis=1,
+                                              keepdims=True)
+    # isotropic: each direction cosine has mean ~0, var ~1/3
+    assert np.abs(dirs.mean(axis=0)).max() < 0.05
+    np.testing.assert_allclose(dirs.var(axis=0), 1 / 3, atol=0.03)
