@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import jax
 
-from benchmarks.common import row, time_fn
+from benchmarks.common import row, time_chained, time_fn
 from repro.configs.pic_bit1 import make_bench_config
 from repro.core import pic
 from repro.core.mover import push
@@ -17,18 +17,20 @@ from repro.core.mover import push
 
 def main() -> list[str]:
     rows = []
-    for strategy in ("unified", "async_batched"):
+    import jax.numpy as jnp
+    for strategy in ("unified", "async_batched", "fused"):
         cfg = make_bench_config(nc=4096, n=131_072, strategy=strategy)
         state = pic.init_state(cfg, 0)
+        # the step donates its input state: copy the electron buffer out
+        # first for the mover-only row, then chain the state through
+        buf = jax.tree.map(jnp.copy, state.species[0])
         step = pic.make_step(cfg)
-        us_total = time_fn(lambda s: step(s)[0].species[0].x, state)
+        us_total = time_chained(lambda s: step(s)[0], state)
 
         grid = cfg.grid
-        buf = state.species[0]
-        import jax.numpy as jnp
         e = jnp.zeros((grid.ng,), jnp.float32)
         mover_only = jax.jit(lambda b, s=strategy: push(
-            b, e, grid, -1.0, cfg.dt, strategy=s, boundary="periodic")[0].x)
+            b, e, grid, -1.0, cfg.dt, strategy=s, boundary="periodic").buf.x)
         us_mover = time_fn(mover_only, buf)
         rows.append(row(f"total_step/{strategy}", us_total,
                         f"mover_frac={us_mover * 3 / us_total:.2f}"))

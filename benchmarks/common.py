@@ -20,5 +20,26 @@ def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
     return times[len(times) // 2] * 1e6
 
 
+def time_chained(step, state, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall-time per call of a self-chaining step, in microseconds.
+
+    ``step(state) -> new_state``-shaped callables (pytrees allowed) are timed
+    by feeding each call's output to the next — REQUIRED for jitted functions
+    with donated buffers, whose inputs are consumed by the call, and exactly
+    how a production stepping loop runs them.
+    """
+    for _ in range(warmup):
+        state = step(state)
+        jax.block_until_ready(state)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        state = step(state)
+        jax.block_until_ready(state)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
 def row(name: str, us: float, derived: str = "") -> str:
     return f"{name},{us:.1f},{derived}"

@@ -3,20 +3,55 @@
   bench_hybrid_total     — Fig. 3 (total vs mover, per strategy)
   bench_scaling          — Fig. 4 (mover scaling with domain count)
   bench_mover_strategies — Fig. 7/8 (data-movement strategies) + Fig. 5/6
-                           (explicit vs unified traffic proxies)
+                           (explicit vs unified traffic proxies) + the
+                           fused-vs-two-pass full-cycle comparison
   bench_ionization       — §3.3 physics scenario throughput
   bench_lm               — assigned-architecture substrate reference
+
+The mover-strategy results are also written as machine-readable JSON
+(default ``BENCH_mover.json``) so successive PRs accumulate a perf
+trajectory. ``--smoke`` runs only the mover benchmark at a reduced size
+(finishes in well under 30 s on 2 CPU cores — the CI configuration, see
+``scripts/ci.sh``).
 """
 
 from __future__ import annotations
 
+import argparse
+import json
 import sys
 import traceback
 
 
+def _write_json(path: str, results: dict) -> None:
+    with open(path, "w") as fh:
+        json.dump(results, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+    print(f"# wrote {path}", file=sys.stderr)
+
+
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI mode: mover benchmark only, small N")
+    ap.add_argument("--json", default="BENCH_mover.json",
+                    help="where to write the mover-strategy results")
+    args = ap.parse_args()
+
+    from benchmarks import bench_mover_strategies
+
+    print("name,us_per_call,derived")
+    if args.smoke:
+        rows, results = bench_mover_strategies.bench(n=65_536, nc=1_024,
+                                                     iters=3)
+        for r in rows:
+            print(f"smoke_strategies/{r}", flush=True)
+        results["mode"] = "smoke"
+        _write_json(args.json, results)
+        return
+
     from benchmarks import (bench_hybrid_total, bench_ionization, bench_lm,
-                            bench_mover_strategies, bench_scaling)
+                            bench_scaling)
     modules = [
         ("fig3_hybrid_total", bench_hybrid_total),
         ("fig4_scaling", bench_scaling),
@@ -24,11 +59,16 @@ def main() -> None:
         ("sec3_ionization", bench_ionization),
         ("lm_substrate", bench_lm),
     ]
-    print("name,us_per_call,derived")
     failed = False
     for tag, mod in modules:
         try:
-            for r in mod.main():
+            if mod is bench_mover_strategies:
+                rows, results = mod.bench()
+                results["mode"] = "full"
+                _write_json(args.json, results)
+            else:
+                rows = mod.main()
+            for r in rows:
                 print(f"{tag}/{r}", flush=True)
         except Exception:
             failed = True

@@ -1,0 +1,13 @@
+#!/usr/bin/env bash
+# CI entry point: tier-1 tests + the smoke perf benchmark.
+#
+# The smoke benchmark runs the mover-strategy suite at small N (<30 s on a
+# 2-core CPU container) and writes BENCH_smoke.json; the full-size results
+# that gate perf PRs live in BENCH_mover.json (python -m benchmarks.run).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -x -q
+python -m benchmarks.run --smoke --json BENCH_smoke.json

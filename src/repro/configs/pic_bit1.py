@@ -22,9 +22,16 @@ CAPACITY = 16_777_216          # 16Mi slots: 1.6x headroom, divides 16 & 32
 
 
 def make_config(scale: int = 1, *, mover_strategy: str = "unified",
-                boundary: str = "periodic") -> pic.PICConfig:
+                boundary: str = "periodic",
+                diag_every: int = 1) -> pic.PICConfig:
     """`scale` only asserts divisibility; sizes are global (the
-    decomposition divides them by the domain count)."""
+    decomposition divides them by the domain count).
+
+    ``mover_strategy`` accepts any of ``mover.STRATEGIES`` — including
+    ``'fused'``, the single-pass push+deposit hot loop. ``diag_every``
+    rate-limits the full-buffer diagnostics reductions (production runs want
+    ~10-100; 1 reproduces the per-step trace the tests assert on).
+    """
     assert NC_GLOBAL % max(scale, 1) == 0
     # weight 1.0 everywhere: the paper's test runs without the field solve,
     # so macro-weights only set the MC collision rates (n_e in P_ionize)
@@ -41,11 +48,13 @@ def make_config(scale: int = 1, *, mover_strategy: str = "unified",
         boundary=boundary,
         strategy=mover_strategy,
         ionization=(2, 0, 1), ionization_rate=1e-4, ionization_vth_e=1.0,
+        diag_every=diag_every,
     )
 
 
 def make_bench_config(nc: int = 4096, n: int = 262_144,
-                      strategy: str = "unified") -> pic.PICConfig:
+                      strategy: str = "unified",
+                      diag_every: int = 1) -> pic.PICConfig:
     """Laptop-scale version for the CPU benchmarks (same physics)."""
     cap = 2 * n
     species = (
@@ -57,4 +66,5 @@ def make_bench_config(nc: int = 4096, n: int = 262_144,
         nc=nc, dx=1.0, dt=0.2, species=species, field_solve=False,
         boundary="periodic", strategy=strategy,
         ionization=(2, 0, 1), ionization_rate=1e-4, ionization_vth_e=1.0,
+        diag_every=diag_every,
     )

@@ -38,8 +38,12 @@ def wall_emission(key: Array, absorbed: SpeciesBuffer, hit_left: Array,
                   ) -> tuple[SpeciesBuffer, dict]:
     """Re-emit secondaries into `target` for each absorbed primary.
 
-    `absorbed` is the PRE-kill buffer of the primary species; hit_left /
-    hit_right are the mover's wall masks over the same slots.
+    hit_left / hit_right are the wall masks the mover reports in its
+    ``PushResult`` (one push per species per step — the masks ARE the record
+    of who was absorbed). `absorbed` is the primary species' buffer over the
+    same slots; only its shapes/dtypes are read (emission position is the
+    wall itself, velocity is resampled half-Maxwellian), so the post-push,
+    post-kill buffer is fine.
     """
     ku, kv = jax.random.split(key)
     hit = hit_left | hit_right

@@ -26,12 +26,30 @@ slice and squeezes it.
 from __future__ import annotations
 
 import dataclasses
+import inspect
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+
+try:                                   # jax >= 0.6: public top-level API
+    from jax import shard_map as _shard_map_impl
+except ImportError:                    # jax 0.4.x: experimental namespace
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+
+# the replication-checking kwarg was renamed check_rep -> check_vma; probe the
+# installed signature once and translate so call sites stay version-agnostic
+_SHARD_MAP_CHECK_KW = (
+    "check_vma"
+    if "check_vma" in inspect.signature(_shard_map_impl).parameters
+    else "check_rep")
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    kw = {_SHARD_MAP_CHECK_KW: check_vma}
+    return _shard_map_impl(f, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs, **kw)
 
 from repro.core import collisions, diagnostics, fields, mover
 from repro.core.grid import Grid1D, deposit
@@ -69,11 +87,17 @@ class DomainConfig:
         return sc.capacity // d
 
 
+def _axis_size(a: str):
+    if hasattr(jax.lax, "axis_size"):        # jax >= 0.5
+        return jax.lax.axis_size(a)
+    return jax.lax.psum(1, a)                # 0.4.x: psum of 1 == axis size
+
+
 def _rank(axis_names) -> Array:
     """Linearized domain index over possibly-multiple mesh axes."""
     r = jnp.zeros((), jnp.int32)
     for a in axis_names:
-        r = r * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+        r = r * _axis_size(a) + jax.lax.axis_index(a)
     return r
 
 
@@ -227,9 +251,9 @@ def make_distributed_step(dcfg: DomainConfig, mesh: Mesh):
                 kw["num_batches"] = cfg.num_batches
             if cfg.strategy != "explicit":
                 kw["gather_mode"] = cfg.gather_mode
-            out, dpush = mover.push(buf, e, grid_local, qm,
-                                    cfg.dt * sc.stride,
-                                    strategy=cfg.strategy, **kw)
+            res = mover.push(buf, e, grid_local, qm, cfg.dt * sc.stride,
+                             strategy=cfg.strategy, **kw)
+            out, dpush = res.buf, res.diag
             kept, recv_l, recv_r, dmig = exchange_species(
                 out, l_local, dcfg, mesh, is_first, is_last)
             pushed.append(kept)

@@ -15,6 +15,19 @@ data movement. The TPU/JAX mapping (DESIGN.md §2):
   ``lax.scan`` over particle batches so migration/collective work of batch k
   overlaps the push of batch k+1 (see ``decomposition.py`` for the
   multi-device form).
+* ``strategy='fused'``    — single-pass push+deposit [Hariri et al. 2016]:
+  the post-push charge is deposited in the same pass that moves the
+  particles, so the cycle reads the particle arrays from HBM once instead of
+  twice. On TPU this is the ``kernels/fused_cycle.py`` Pallas kernel (the
+  deposit accumulates in VMEM while the tile is resident); on other backends
+  a pure-jnp equivalent whose deposition is ONE windowed scatter-add
+  (``grid.deposit_windowed``) instead of two scalar scatters.
+
+Every strategy returns a ``PushResult`` carrying the wall-hit masks of this
+push. The masks are what the plasma-wall sources (SEE / sputtering,
+``boundaries.py``) consume — returning them directly is what lets the cycle
+push each species exactly ONCE per step (the seed pushed wall-emitting
+species twice: once open to find the hits, once more to apply the boundary).
 
 Physics: non-relativistic Boris push, 1D3V. E = (Ex(x), 0, 0) gathered from
 the node field; optional constant background B rotates the 3V velocity.
@@ -25,20 +38,39 @@ loops in the paper's Listings 1.1-1.4.
 from __future__ import annotations
 
 import dataclasses
-from typing import Literal
+from typing import Literal, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.grid import Grid1D, gather, gather_onehot
-from repro.core.particles import SpeciesBuffer
+from repro.core.grid import (Grid1D, deposit_stacked, deposit_windowed,
+                             gather, gather_onehot)
+from repro.core.particles import SpeciesBuffer, StackedSpecies
 
 Array = jax.Array
 
-Strategy = Literal["unified", "explicit", "async_batched"]
+Strategy = Literal["unified", "explicit", "async_batched", "fused"]
 # 'open': leave positions raw — the domain-decomposed step routes crossers
 # to neighbor domains (decomposition.py) instead of wrapping/absorbing here.
 Boundary = Literal["periodic", "absorb", "open"]
+
+STRATEGIES = ("unified", "explicit", "async_batched", "fused")
+BOUNDARIES = ("periodic", "absorb", "open")
+
+
+class PushResult(NamedTuple):
+    """What one mover invocation produces.
+
+    ``hit_left`` / ``hit_right`` are per-slot wall masks (all-False unless
+    ``boundary='absorb'``); ``rho`` is the post-push charge density and is
+    only populated by the fused strategy when a deposit was requested.
+    """
+
+    buf: SpeciesBuffer
+    hit_left: Array
+    hit_right: Array
+    diag: dict
+    rho: Array | None = None
 
 
 def boris_kick(v: Array, e_x: Array, qm_dt: Array | float,
@@ -75,55 +107,97 @@ def apply_boundary(x: Array, alive: Array, length: float,
     return xc, new_alive, hit_l, hit_r
 
 
+def _wall_diag(v: Array, w: Array, hl: Array, hr: Array) -> dict:
+    """Divertor diagnostics: particle + energy flux absorbed at each wall."""
+    ke = 0.5 * jnp.sum(v * v, axis=-1) * w
+    return {
+        "absorbed_left": jnp.sum(hl.astype(jnp.int32), axis=-1),
+        "absorbed_right": jnp.sum(hr.astype(jnp.int32), axis=-1),
+        "power_left": jnp.sum(jnp.where(hl, ke, 0.0), axis=-1),
+        "power_right": jnp.sum(jnp.where(hr, ke, 0.0), axis=-1),
+    }
+
+
+def _push_core(x: Array, v: Array, alive: Array, e: Array, grid: Grid1D,
+               qm_dt: Array | float, dt: Array | float,
+               b: tuple[float, float, float], boundary: Boundary,
+               gather_mode: str):
+    """Gather + Boris + drift + boundary on raw arrays (vmap-friendly)."""
+    g = gather_onehot if gather_mode == "onehot" else gather
+    e_x = g(grid, e, x) * alive
+    v = boris_kick(v, e_x, qm_dt, b)
+    x = x + v[:, 0] * dt
+    x, alive, hl, hr = apply_boundary(x, alive, grid.length, boundary)
+    return x, v, alive, hl, hr
+
+
 def push_unified(buf: SpeciesBuffer, e: Array, grid: Grid1D, qm: float,
                  dt: float, b: tuple[float, float, float] = (0.0, 0.0, 0.0),
                  boundary: Boundary = "periodic",
-                 gather_mode: str = "take") -> tuple[SpeciesBuffer, dict]:
+                 gather_mode: str = "take") -> PushResult:
     """Pure-jnp mover (XLA-managed data movement — the 'unified' strategy)."""
-    g = gather_onehot if gather_mode == "onehot" else gather
-    e_x = g(grid, e, buf.x) * buf.alive
-    v = boris_kick(buf.v, e_x, qm * dt, b)
-    x = buf.x + v[:, 0] * dt
-    x, alive, hl, hr = apply_boundary(x, buf.alive, grid.length, boundary)
-    # divertor diagnostics: particle + energy flux absorbed at each wall
-    ke = 0.5 * jnp.sum(v * v, axis=-1) * buf.w
-    diag = {
-        "absorbed_left": jnp.sum(hl.astype(jnp.int32)),
-        "absorbed_right": jnp.sum(hr.astype(jnp.int32)),
-        "power_left": jnp.sum(jnp.where(hl, ke, 0.0)),
-        "power_right": jnp.sum(jnp.where(hr, ke, 0.0)),
-    }
+    x, v, alive, hl, hr = _push_core(buf.x, buf.v, buf.alive, e, grid,
+                                     qm * dt, dt, b, boundary, gather_mode)
+    diag = _wall_diag(v, buf.w, hl, hr)
     out = dataclasses.replace(buf, x=x, v=v, alive=alive, w=buf.w * alive)
-    return out, diag
+    return PushResult(out, hl, hr, diag)
 
 
 def push_explicit(buf: SpeciesBuffer, e: Array, grid: Grid1D, qm: float,
                   dt: float, b: tuple[float, float, float] = (0.0, 0.0, 0.0),
                   boundary: Boundary = "periodic",
-                  gather_mode: str = "take") -> tuple[SpeciesBuffer, dict]:
+                  gather_mode: str = "take") -> PushResult:
     """Pallas fused mover (explicit VMEM staging — the 'explicit' strategy)."""
     from repro.kernels import ops  # local import: kernels are optional deps
     x, v, alive, hl, hr = ops.mover_push(
         buf.x, buf.v, buf.alive, e, x0=grid.x0, dx=grid.dx,
         length=grid.length, qm=qm, dt=dt, b=b, boundary=boundary,
         gather_mode=gather_mode)
-    ke = 0.5 * jnp.sum(v * v, axis=-1) * buf.w
-    diag = {
-        "absorbed_left": jnp.sum(hl.astype(jnp.int32)),
-        "absorbed_right": jnp.sum(hr.astype(jnp.int32)),
-        "power_left": jnp.sum(jnp.where(hl, ke, 0.0)),
-        "power_right": jnp.sum(jnp.where(hr, ke, 0.0)),
-    }
+    diag = _wall_diag(v, buf.w, hl, hr)
     out = dataclasses.replace(buf, x=x, v=v, alive=alive, w=buf.w * alive)
-    return out, diag
+    return PushResult(out, hl, hr, diag)
+
+
+def push_fused(buf: SpeciesBuffer, e: Array, grid: Grid1D, qm: float,
+               dt: float, b: tuple[float, float, float] = (0.0, 0.0, 0.0),
+               boundary: Boundary = "periodic", gather_mode: str = "take",
+               deposit_charge: float | None = None) -> PushResult:
+    """Single-pass push+deposit (the 'fused' strategy).
+
+    When ``deposit_charge`` is given, the POST-push charge density
+    ``deposit_charge * w * alive`` lands in ``PushResult.rho`` — computed in
+    the same pass over the particle arrays as the push itself, so HBM sees
+    them once. On TPU this runs as the ``kernels/fused_cycle.py`` Pallas
+    kernel; elsewhere as pure jnp with the windowed one-scatter deposit.
+    """
+    if jax.default_backend() == "tpu":
+        from repro.kernels import ops
+        x, v, alive, hl, hr, w, rho = ops.fused_push_deposit(
+            buf.x, buf.v, buf.alive, buf.w, e, x0=grid.x0, dx=grid.dx,
+            length=grid.length, qm=qm, dt=dt,
+            charge=0.0 if deposit_charge is None else deposit_charge,
+            b=b, boundary=boundary, deposit=deposit_charge is not None)
+        diag = _wall_diag(v, buf.w, hl, hr)
+        out = dataclasses.replace(buf, x=x, v=v, alive=alive, w=w)
+        return PushResult(out, hl, hr, diag,
+                          rho if deposit_charge is not None else None)
+
+    x, v, alive, hl, hr = _push_core(buf.x, buf.v, buf.alive, e, grid,
+                                     qm * dt, dt, b, boundary, gather_mode)
+    diag = _wall_diag(v, buf.w, hl, hr)
+    w = buf.w * alive
+    rho = None
+    if deposit_charge is not None:
+        rho = deposit_windowed(grid, x, deposit_charge * w)
+    out = dataclasses.replace(buf, x=x, v=v, alive=alive, w=w)
+    return PushResult(out, hl, hr, diag, rho)
 
 
 def push_async_batched(buf: SpeciesBuffer, e: Array, grid: Grid1D, qm: float,
                        dt: float, num_batches: int = 4,
                        b: tuple[float, float, float] = (0.0, 0.0, 0.0),
                        boundary: Boundary = "periodic",
-                       gather_mode: str = "take"
-                       ) -> tuple[SpeciesBuffer, dict]:
+                       gather_mode: str = "take") -> PushResult:
     """Batched mover: scan over particle batches (paper's async extension).
 
     On one device this pipelines HBM traffic per batch; under shard_map the
@@ -131,7 +205,11 @@ def push_async_batched(buf: SpeciesBuffer, e: Array, grid: Grid1D, qm: float,
     (XLA schedules the ppermute async against the next scan body).
     """
     cap = buf.capacity
-    assert cap % num_batches == 0, "capacity must divide into batches"
+    if cap % num_batches != 0:
+        raise ValueError(
+            f"strategy='async_batched' needs the species capacity ({cap}) "
+            f"to be divisible by num_batches ({num_batches}); pick a batch "
+            f"count that divides every species capacity or pad the buffers")
     bs = cap // num_batches
 
     def reshape(a):
@@ -142,16 +220,19 @@ def push_async_batched(buf: SpeciesBuffer, e: Array, grid: Grid1D, qm: float,
 
     def body(carry, sl):
         sbuf = SpeciesBuffer(x=sl[0], v=sl[1], w=sl[2], alive=sl[3])
-        out, diag = push_unified(sbuf, e, grid, qm, dt, b, boundary,
-                                 gather_mode)
+        out, hl, hr, diag, _ = push_unified(sbuf, e, grid, qm, dt, b,
+                                            boundary, gather_mode)
         acc = jax.tree.map(jnp.add, carry, diag)
-        return acc, (out.x, out.v, out.w, out.alive)
+        return acc, (out.x, out.v, out.w, out.alive, hl, hr)
 
-    zero = {"absorbed_left": jnp.zeros((), jnp.int32),
-            "absorbed_right": jnp.zeros((), jnp.int32),
-            "power_left": jnp.zeros((), buf.x.dtype),
-            "power_right": jnp.zeros((), buf.x.dtype)}
-    diag, (x, v, w, alive) = jax.lax.scan(
+    # derive the zero carry from the actual per-batch diag structure so the
+    # dtypes track whatever the boundary/dtype combination produces
+    first = jax.tree.map(lambda a: a[0], batched)
+    diag_shape = jax.eval_shape(
+        lambda bb: push_unified(bb, e, grid, qm, dt, b, boundary,
+                                gather_mode).diag, first)
+    zero = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), diag_shape)
+    diag, (x, v, w, alive, hl, hr) = jax.lax.scan(
         body, zero, (batched.x, batched.v, batched.w, batched.alive))
 
     def unshape(a):
@@ -159,16 +240,49 @@ def push_async_batched(buf: SpeciesBuffer, e: Array, grid: Grid1D, qm: float,
 
     out = SpeciesBuffer(x=unshape(x), v=unshape(v), w=unshape(w),
                         alive=unshape(alive))
-    return out, diag
+    return PushResult(out, unshape(hl), unshape(hr), diag)
+
+
+def push_stacked(st: StackedSpecies, e: Array, grid: Grid1D, qm: Array,
+                 dt: Array, b: tuple[float, float, float] = (0.0, 0.0, 0.0),
+                 boundary: Boundary = "periodic", gather_mode: str = "take",
+                 charges: Array | None = None
+                 ) -> tuple[StackedSpecies, Array, Array, dict, Array | None]:
+    """vmap'd Boris push over the species axis of a StackedSpecies.
+
+    ``qm`` and ``dt`` are (S,) per-species arrays (q/m and dt*stride). When
+    ``charges`` (S,) is given the post-push TOTAL charge density of all
+    species is deposited in the same pass (one flattened windowed scatter)
+    and returned as ``rho``; pass None to skip deposition.
+
+    Returns (stacked, hit_left (S, cap), hit_right (S, cap),
+    diag dict of (S,) arrays, rho | None).
+    """
+    def core(x, v, alive, qm_s, dt_s):
+        return _push_core(x, v, alive, e, grid, qm_s * dt_s, dt_s, b,
+                          boundary, gather_mode)
+
+    x, v, alive, hl, hr = jax.vmap(core)(st.x, st.v, st.alive, qm, dt)
+    diag = _wall_diag(v, st.w, hl, hr)          # reductions over axis=-1
+    w = st.w * alive
+    out = StackedSpecies(x=x, v=v, w=w, alive=alive)
+    rho = None
+    if charges is not None:
+        rho = deposit_stacked(grid, x, w, alive, charges)
+    return out, hl, hr, diag, rho
 
 
 PUSH = {
     "unified": push_unified,
     "explicit": push_explicit,
     "async_batched": push_async_batched,
+    "fused": push_fused,
 }
 
 
 def push(buf: SpeciesBuffer, e: Array, grid: Grid1D, qm: float, dt: float,
-         strategy: Strategy = "unified", **kw) -> tuple[SpeciesBuffer, dict]:
+         strategy: Strategy = "unified", **kw) -> PushResult:
+    if strategy not in PUSH:
+        raise ValueError(
+            f"unknown mover strategy {strategy!r}; valid: {STRATEGIES}")
     return PUSH[strategy](buf, e, grid, qm, dt, **kw)

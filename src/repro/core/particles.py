@@ -19,11 +19,39 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 
 Array = jax.Array
+
+# ---- planar layout contract (shared by every Pallas kernel) ----------------
+# TPU kernels view each particle array as (rows, LANES) planes so tiles are
+# VREG-aligned. The contract lives HERE, next to the buffer type: a capacity
+# that is a multiple of ``tile_rows * LANES`` round-trips through
+# ``to_planes`` / ``from_planes`` as a zero-copy reshape; anything else pays
+# one pad-concatenate per call (only tiny test buffers do).
+LANES = 128
+
+
+def plane_pad(a: Array, block: int, value=0.0) -> Array:
+    """Pad axis 0 up to a multiple of ``block`` (no-op when already aligned)."""
+    pad = (-a.shape[0]) % block
+    if pad == 0:
+        return a
+    return jnp.concatenate(
+        [a, jnp.full((pad,) + a.shape[1:], value, a.dtype)])
+
+
+def to_planes(a: Array, tile_rows: int = 8, value=0.0) -> Array:
+    """(cap,) -> (rows, LANES) with rows a multiple of ``tile_rows``."""
+    return plane_pad(a, tile_rows * LANES, value).reshape(-1, LANES)
+
+
+def from_planes(p: Array, capacity: int) -> Array:
+    """(rows, LANES) -> (capacity,), dropping pad slots."""
+    return p.reshape(-1)[:capacity]
 
 
 @partial(jax.tree_util.register_dataclass,
@@ -44,6 +72,55 @@ class SpeciesBuffer:
 
     def count(self) -> Array:
         return jnp.sum(self.alive.astype(jnp.int32))
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("x", "v", "w", "alive"),
+         meta_fields=())
+@dataclasses.dataclass
+class StackedSpecies:
+    """All same-capacity species as one (S, cap) SoA pytree.
+
+    The stacked form is what the fused PIC hot loop consumes: one ``vmap``'d
+    Boris push over the species axis instead of a per-species Python loop,
+    and one flattened (S*cap,) deposition instead of S sequential scatters.
+    Per-species scalars (q/m, dt*stride, charge) travel as (S,) arrays
+    broadcast against the capacity axis.
+    """
+
+    x: Array      # (S, cap)
+    v: Array      # (S, cap, 3)
+    w: Array      # (S, cap)
+    alive: Array  # (S, cap)
+
+    @property
+    def num_species(self) -> int:
+        return self.x.shape[0]
+
+    @property
+    def capacity(self) -> int:
+        return self.x.shape[1]
+
+    def counts(self) -> Array:
+        return jnp.sum(self.alive.astype(jnp.int32), axis=1)
+
+
+def stack_species(bufs: Sequence[SpeciesBuffer]) -> StackedSpecies:
+    """Stack same-capacity species buffers into one (S, cap) pytree."""
+    caps = {b.capacity for b in bufs}
+    if len(caps) != 1:
+        raise ValueError(f"stack_species needs equal capacities, got {caps}")
+    return StackedSpecies(
+        x=jnp.stack([b.x for b in bufs]),
+        v=jnp.stack([b.v for b in bufs]),
+        w=jnp.stack([b.w for b in bufs]),
+        alive=jnp.stack([b.alive for b in bufs]))
+
+
+def unstack_species(st: StackedSpecies) -> tuple[SpeciesBuffer, ...]:
+    return tuple(
+        SpeciesBuffer(x=st.x[s], v=st.v[s], w=st.w[s], alive=st.alive[s])
+        for s in range(st.num_species))
 
 
 def make_species(capacity: int, dtype=jnp.float32) -> SpeciesBuffer:

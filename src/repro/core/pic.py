@@ -5,6 +5,22 @@ The paper's benchmark configuration (``configs/pic_bit1.py``) disables the
 field-solve phase (as its §3.3 test does) and exercises mover + MC ionization
 only; the full cycle (deposit -> smooth -> Poisson -> E -> push -> collide)
 is implemented and tested regardless.
+
+Hot-loop structure (this file is the perf-critical assembly):
+
+* same-capacity species are stacked into ONE ``StackedSpecies`` (S, cap)
+  pytree and pushed with a single ``vmap``'d Boris kernel over the species
+  axis — no per-species Python loop, and the field deposit collapses S
+  sequential scatters into one flattened windowed scatter;
+* every mover strategy reports its wall-hit masks directly
+  (``mover.PushResult``), so the plasma-wall emission source consumes the
+  masks of THE push — each species is pushed exactly once per step;
+* ``strategy='fused'`` deposits the post-push charge inside the push pass
+  and the step carries that rho to the next field solve (``PICState.rho``),
+  so particle arrays make one HBM round-trip per cycle instead of two;
+* ``make_step``/``run`` donate the particle buffers to the step (XLA updates
+  them in place rather than copying the full state every step), and
+  ``diag_every`` rate-limits the full-buffer diagnostics reductions.
 """
 
 from __future__ import annotations
@@ -17,8 +33,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import collisions, diagnostics, fields, mover
-from repro.core.grid import Grid1D, deposit, deposit_density
-from repro.core.particles import SpeciesBuffer, init_uniform
+from repro.core.grid import Grid1D, deposit, deposit_stacked
+from repro.core.particles import (SpeciesBuffer, init_uniform, stack_species,
+                                  unstack_species)
 
 Array = jax.Array
 
@@ -60,6 +77,35 @@ class PICConfig:
     wall_emission: tuple[tuple[int, int], ...] = ()
     emission_yield: float = 0.0
     emission_vth: float = 1.0
+    # compute the full-buffer diagnostics reductions (counts, kinetic/field
+    # energy) only every k-th step; off-steps report zeros
+    diag_every: int = 1
+
+    def __post_init__(self):
+        # normalize to tuples: configs must stay hashable (they ride through
+        # jit as static arguments in run())
+        object.__setattr__(self, "species", tuple(self.species))
+        object.__setattr__(self, "wall_emission",
+                           tuple(tuple(p) for p in self.wall_emission))
+        if self.strategy not in mover.STRATEGIES:
+            raise ValueError(
+                f"unknown mover strategy {self.strategy!r}; valid strategies"
+                f" are {mover.STRATEGIES}")
+        if self.boundary not in mover.BOUNDARIES:
+            raise ValueError(
+                f"unknown boundary {self.boundary!r}; valid boundaries are "
+                f"{mover.BOUNDARIES}")
+        if self.diag_every < 1:
+            raise ValueError(
+                f"diag_every must be >= 1, got {self.diag_every}")
+        if self.strategy == "async_batched":
+            bad = [sc.name for sc in self.species
+                   if sc.capacity % self.num_batches != 0]
+            if bad:
+                raise ValueError(
+                    f"strategy='async_batched' needs num_batches "
+                    f"({self.num_batches}) to divide every species capacity;"
+                    f" offending species: {bad}")
 
     @property
     def grid(self) -> Grid1D:
@@ -71,12 +117,33 @@ class PICConfig:
 
 
 @partial(jax.tree_util.register_dataclass,
-         data_fields=("species", "key", "step"), meta_fields=())
+         data_fields=("species", "key", "step", "rho"), meta_fields=())
 @dataclasses.dataclass
 class PICState:
     species: tuple[SpeciesBuffer, ...]
     key: Array
     step: Array
+    # post-push charge density carried by the fused strategy (None otherwise):
+    # deposited inside the push pass of step k, consumed by the field solve of
+    # step k+1 — the positions are the same ones, just never re-read from HBM
+    rho: Array | None = None
+
+
+def _stackable(cfg: PICConfig) -> bool:
+    """All species share one capacity -> the (S, cap) fast path applies."""
+    return len(cfg.species) > 0 and len(
+        {sc.capacity for sc in cfg.species}) == 1
+
+
+def _carries_rho(cfg: PICConfig) -> bool:
+    """The fused strategy may carry its in-pass deposit to the next field
+    solve only when nothing changes the charge AFTER the push: no ionization
+    birth, no wall emission, no sub-cycled (frozen) species. Otherwise the
+    field phase re-deposits from scratch and stays exact."""
+    return (cfg.strategy == "fused" and cfg.field_solve
+            and cfg.ionization is None
+            and not (cfg.wall_emission and cfg.boundary == "absorb")
+            and all(sc.stride == 1 for sc in cfg.species))
 
 
 def init_state(cfg: PICConfig, seed: int = 0) -> PICState:
@@ -86,31 +153,81 @@ def init_state(cfg: PICConfig, seed: int = 0) -> PICState:
         init_uniform(keys[i], sc.capacity, sc.n_init, cfg.length, sc.vth,
                      sc.drift, sc.weight)
         for i, sc in enumerate(cfg.species))
-    return PICState(species=bufs, key=keys[-1], step=jnp.zeros((), jnp.int32))
+    rho = compute_rho(cfg, bufs) if _carries_rho(cfg) else None
+    return PICState(species=bufs, key=keys[-1], step=jnp.zeros((), jnp.int32),
+                    rho=rho)
 
 
-def compute_field(cfg: PICConfig, species: tuple[SpeciesBuffer, ...]) -> Array:
-    """deposit rho -> smooth -> Poisson -> E (the field phase of the cycle)."""
+def compute_rho(cfg: PICConfig, species: tuple[SpeciesBuffer, ...]) -> Array:
+    """Total charge density: one flattened (S*cap,) windowed scatter when the
+    species stack, the per-species scatter loop otherwise."""
     grid = cfg.grid
+    if _stackable(cfg):
+        st = stack_species(species)
+        charges = jnp.asarray([sc.charge for sc in cfg.species], st.x.dtype)
+        return deposit_stacked(grid, st.x, st.w, st.alive, charges)
     rho = jnp.zeros((grid.ng,), jnp.float32)
     for sc, buf in zip(cfg.species, species):
         if sc.charge != 0.0:
             rho = rho + deposit(grid, buf, sc.charge)
+    return rho
+
+
+def field_from_rho(cfg: PICConfig, rho: Array) -> Array:
+    """smooth -> Poisson -> E (the field phase after deposition)."""
     rho = fields.smooth_binomial(rho, cfg.smoothing_passes)
     phi = fields.solve_poisson(rho, cfg.dx, cfg.eps0)
     return fields.efield(phi, cfg.dx)
 
 
-def step_fn(state: PICState, cfg: PICConfig) -> tuple[PICState, dict]:
-    grid = cfg.grid
-    e = (compute_field(cfg, state.species) if cfg.field_solve
-         else jnp.zeros((grid.ng,), jnp.float32))
+def compute_field(cfg: PICConfig, species: tuple[SpeciesBuffer, ...]) -> Array:
+    """deposit rho -> smooth -> Poisson -> E (the field phase of the cycle)."""
+    return field_from_rho(cfg, compute_rho(cfg, species))
 
+
+def _push_all(state: PICState, cfg: PICConfig, e: Array):
+    """Push every species exactly once; returns (species list,
+    per-species (hit_l, hit_r) masks, diag dict, fused rho | None)."""
+    grid = cfg.grid
     diag: dict = {}
-    new_species = []
-    key = state.key
-    wall_hits: dict[int, tuple] = {}
-    for si, (sc, buf) in enumerate(zip(cfg.species, state.species)):
+    hits: list[tuple[Array, Array]] = []
+    new_rho = None
+    carried = _carries_rho(cfg)
+
+    if _stackable(cfg) and cfg.strategy in ("unified", "fused"):
+        # ---- stacked fast path: one vmap'd push over the species axis ----
+        st = stack_species(state.species)
+        dtype = st.x.dtype
+        qm = jnp.asarray([sc.charge / sc.mass for sc in cfg.species], dtype)
+        dts = jnp.asarray([cfg.dt * sc.stride for sc in cfg.species], dtype)
+        charges = (jnp.asarray([sc.charge for sc in cfg.species], dtype)
+                   if carried else None)
+        out, hl, hr, pdiag, new_rho = mover.push_stacked(
+            st, e, grid, qm, dts, b=cfg.b_field, boundary=cfg.boundary,
+            gather_mode=cfg.gather_mode, charges=charges)
+        strides = [sc.stride for sc in cfg.species]
+        if any(s > 1 for s in strides):
+            # sub-cycling (BIT1's nstep): heavy/neutral species push every
+            # `stride` steps with dt*stride; frozen species keep their state
+            do = jnp.mod(state.step, jnp.asarray(strides)) == 0      # (S,)
+            def freeze(new, old):
+                sel = do.reshape((-1,) + (1,) * (new.ndim - 1))
+                return jnp.where(sel, new, old)
+            out = jax.tree.map(freeze, out, st)
+            hl = hl & do[:, None]
+            hr = hr & do[:, None]
+            pdiag = {k: jnp.where(do, v, jnp.zeros_like(v))
+                     for k, v in pdiag.items()}
+        species = list(unstack_species(out))
+        for si, sc in enumerate(cfg.species):
+            hits.append((hl[si], hr[si]))
+            diag.update({f"{sc.name}/{k}": v[si] for k, v in pdiag.items()})
+        return species, hits, diag, new_rho
+
+    # ---- general path: per-species loop (explicit / async_batched, or
+    #      heterogeneous capacities) ----
+    species = []
+    for sc, buf in zip(cfg.species, state.species):
         qm = sc.charge / sc.mass
         dt_s = cfg.dt * sc.stride
         kw = dict(b=cfg.b_field, boundary=cfg.boundary)
@@ -118,46 +235,50 @@ def step_fn(state: PICState, cfg: PICConfig) -> tuple[PICState, dict]:
             kw["num_batches"] = cfg.num_batches
         if cfg.strategy != "explicit":
             kw["gather_mode"] = cfg.gather_mode
-        if cfg.boundary == "absorb" and any(p == si for p, _ in
-                                            cfg.wall_emission):
-            # capture per-slot wall masks for the SEE source below
-            pre = buf
-            pushed0, d0 = mover.push(buf, e, grid, qm, dt_s,
-                                     strategy="unified", b=cfg.b_field,
-                                     boundary="open",
-                                     gather_mode=cfg.gather_mode)
-            hl = pre.alive & (pushed0.x < 0.0)
-            hr = pre.alive & (pushed0.x >= cfg.length)
-            wall_hits[si] = (pushed0, hl, hr)
-        pushed, d = mover.push(buf, e, grid, qm, dt_s,
-                               strategy=cfg.strategy, **kw)
+        if cfg.strategy == "fused" and carried and sc.charge != 0.0:
+            kw["deposit_charge"] = sc.charge    # neutrals deposit nothing
+        res = mover.push(buf, e, grid, qm, dt_s, strategy=cfg.strategy, **kw)
+        pushed, hl, hr, d = res.buf, res.hit_left, res.hit_right, res.diag
+        if res.rho is not None:
+            new_rho = res.rho if new_rho is None else new_rho + res.rho
         if sc.stride > 1:
-            # sub-cycling (BIT1's nstep): heavy/neutral species push every
-            # `stride` steps with dt*stride; skip otherwise
             do_push = jnp.mod(state.step, sc.stride) == 0
             pushed = jax.tree.map(lambda n, o: jnp.where(do_push, n, o),
                                   pushed, buf)
             d = jax.tree.map(lambda v: jnp.where(do_push, v, 0), d)
-        buf = pushed
-        new_species.append(buf)
+            hl = hl & do_push
+            hr = hr & do_push
+        species.append(pushed)
+        hits.append((hl, hr))
         diag.update({f"{sc.name}/{k}": v for k, v in d.items()})
-    species = tuple(new_species)
+    return species, hits, diag, new_rho
+
+
+def step_fn(state: PICState, cfg: PICConfig) -> tuple[PICState, dict]:
+    grid = cfg.grid
+    carried = _carries_rho(cfg)
+    if not cfg.field_solve:
+        e = jnp.zeros((grid.ng,), jnp.float32)
+    elif carried and state.rho is not None:
+        e = field_from_rho(cfg, state.rho)
+    else:
+        e = compute_field(cfg, state.species)
+
+    key = state.key
+    species, hits, diag, new_rho = _push_all(state, cfg, e)
 
     if cfg.wall_emission and cfg.boundary == "absorb":
         from repro.core.boundaries import EmissionParams, wall_emission
         params = EmissionParams(yield_=cfg.emission_yield,
                                 vth_emit=cfg.emission_vth)
-        lst = list(species)
         for primary, target in cfg.wall_emission:
-            if primary not in wall_hits:
-                continue
             key, sub = jax.random.split(key)
-            pre, hl, hr = wall_hits[primary]
-            lst[target], d = wall_emission(sub, pre, hl, hr, lst[target],
-                                           params, cfg.length)
+            hl, hr = hits[primary]
+            species[target], d = wall_emission(sub, species[primary], hl, hr,
+                                               species[target], params,
+                                               cfg.length)
             diag.update({f"{cfg.species[target].name}/{k}": v
                          for k, v in d.items()})
-        species = tuple(lst)
 
     if cfg.ionization is not None:
         ni, ei, ii = cfg.ionization
@@ -166,35 +287,65 @@ def step_fn(state: PICState, cfg: PICConfig) -> tuple[PICState, dict]:
             rate=cfg.ionization_rate, vth_electron=cfg.ionization_vth_e)
         neu, ele, ion, d = collisions.ionize(
             sub, species[ni], species[ei], species[ii], grid, params, cfg.dt)
-        lst = list(species)
-        lst[ni], lst[ei], lst[ii] = neu, ele, ion
-        species = tuple(lst)
+        species[ni], species[ei], species[ii] = neu, ele, ion
         diag.update(d)
 
-    for sc, buf in zip(cfg.species, species):
-        diag[f"{sc.name}/count"] = buf.count()
-        diag[f"{sc.name}/ke"] = diagnostics.kinetic_energy(buf, sc.mass)
-    if cfg.field_solve:
-        diag["field_energy"] = diagnostics.field_energy(e, grid, cfg.eps0)
+    species = tuple(species)
 
-    out = PICState(species=species, key=key, step=state.step + 1)
+    def step_diag() -> dict:
+        d = {}
+        for sc, buf in zip(cfg.species, species):
+            d[f"{sc.name}/count"] = buf.count()
+            d[f"{sc.name}/ke"] = diagnostics.kinetic_energy(buf, sc.mass)
+        if cfg.field_solve:
+            d["field_energy"] = diagnostics.field_energy(e, grid, cfg.eps0)
+        return d
+
+    if cfg.diag_every > 1:
+        # rate-limit the full-buffer reductions: lax.cond executes only the
+        # taken branch, so off-steps skip the O(S*cap) sweeps entirely
+        shapes = jax.eval_shape(step_diag)
+        zeros = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
+        diag.update(jax.lax.cond(
+            jnp.mod(state.step, cfg.diag_every) == 0, step_diag,
+            lambda: zeros))
+    else:
+        diag.update(step_diag())
+
+    out = PICState(species=species, key=key, step=state.step + 1,
+                   rho=new_rho if carried else state.rho)
     return out, diag
 
 
 def make_step(cfg: PICConfig):
-    """jit-compiled single step closing over the static config."""
-    return jax.jit(partial(step_fn, cfg=cfg))
+    """jit-compiled single step closing over the static config.
+
+    The state argument is DONATED: XLA reuses the particle buffers in place
+    instead of copying the full state every step, so the previous state is
+    invalid after the call (rebind, as in ``state, d = step(state)``).
+    """
+    return jax.jit(partial(step_fn, cfg=cfg), donate_argnums=0)
+
+
+@partial(jax.jit, static_argnames=("cfg", "steps"), donate_argnums=(0,))
+def _run_scan(state: PICState, cfg: PICConfig, steps: int):
+    def body(s, _):
+        return step_fn(s, cfg)
+
+    return jax.lax.scan(body, state, None, length=steps)
 
 
 def run(cfg: PICConfig, steps: int, seed: int = 0,
         state: PICState | None = None) -> tuple[PICState, dict]:
-    """Run `steps` steps under lax.scan; returns final state + stacked diag."""
+    """Run `steps` steps under lax.scan; returns final state + stacked diag.
+
+    The initial state is donated to the scan (see ``make_step``).
+    """
     if state is None:
         state = init_state(cfg, seed)
-
-    def body(s, _):
-        s, d = step_fn(s, cfg)
-        return s, d
-
-    final, diags = jax.lax.scan(body, state, None, length=steps)
-    return final, diags
+    if _carries_rho(cfg) and state.rho is None:
+        # warm-starting a fused run from a non-fused state: seed the carried
+        # rho so the scan carry keeps one pytree structure throughout
+        state = dataclasses.replace(
+            state, rho=compute_rho(cfg, state.species))
+    return _run_scan(state, cfg, steps)

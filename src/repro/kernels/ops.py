@@ -1,9 +1,11 @@
 """Public jit'd wrappers around the Pallas kernels.
 
-Handles the (cap,) <-> (rows, 128) planar relayout, padding, dtype plumbing,
-and backend selection: on CPU/GPU backends the kernels run in interpret mode
-(Python evaluation of the kernel body — the validation mode for this
-container); on TPU they compile through Mosaic.
+Dtype plumbing and backend selection live here; the planar
+(cap,) <-> (rows, 128) relayout contract lives in ``core/particles.py``
+(``to_planes`` / ``from_planes``), shared with the buffers themselves so the
+layout is defined exactly once. On CPU/GPU backends the kernels run in
+interpret mode (Python evaluation of the kernel body — the validation mode
+for this container); on TPU they compile through Mosaic.
 """
 
 from __future__ import annotations
@@ -13,28 +15,22 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.core.particles import LANES, from_planes, plane_pad, to_planes
 from repro.kernels import deposit as _deposit
+from repro.kernels import fused_cycle as _fused
 from repro.kernels import mover as _mover
 
 Array = jax.Array
-
-LANES = 128
 
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def _pad_to(a: Array, mult: int, value=0.0) -> Array:
-    n = a.shape[0]
-    pad = (-n) % mult
-    if pad == 0:
-        return a
-    return jnp.concatenate([a, jnp.full((pad,) + a.shape[1:], value, a.dtype)])
-
-
-def _planes(a: Array) -> Array:
-    return a.reshape(-1, LANES)
+def _particle_planes(x: Array, v: Array, alive: Array, tile_rows: int):
+    return (to_planes(x, tile_rows), to_planes(v[:, 0], tile_rows),
+            to_planes(v[:, 1], tile_rows), to_planes(v[:, 2], tile_rows),
+            to_planes(alive.astype(x.dtype), tile_rows))
 
 
 @partial(jax.jit, static_argnames=("x0", "dx", "length", "qm", "dt", "b",
@@ -51,14 +47,8 @@ def mover_push(x: Array, v: Array, alive: Array, e: Array, *, x0: float,
     del gather_mode  # in-kernel gather is jnp.take; onehot lives at XLA level
     cap = x.shape[0]
     nc = round(length / dx)
-    block = tile_rows * LANES
-    xp = _planes(_pad_to(x, block))
-    vxp = _planes(_pad_to(v[:, 0], block))
-    vyp = _planes(_pad_to(v[:, 1], block))
-    vzp = _planes(_pad_to(v[:, 2], block))
-    ap = _planes(_pad_to(alive.astype(x.dtype), block))
-    ng_pad = e.shape[0] + ((-e.shape[0]) % LANES)
-    ep = _pad_to(e, LANES)[None, :]
+    xp, vxp, vyp, vzp, ap = _particle_planes(x, v, alive, tile_rows)
+    ep = plane_pad(e, LANES)[None, :]
 
     xn, vxn, vyn, vzn, an, hl, hr = _mover.mover_push_pallas(
         xp, vxp, vyp, vzp, ap, ep, x0=x0, dx=dx, nc=nc, length=length,
@@ -66,11 +56,47 @@ def mover_push(x: Array, v: Array, alive: Array, e: Array, *, x0: float,
         interpret=_interpret())
 
     def unpad(p):
-        return p.reshape(-1)[:cap]
+        return from_planes(p, cap)
 
     v_out = jnp.stack([unpad(vxn), unpad(vyn), unpad(vzn)], axis=-1)
     return (unpad(xn), v_out, unpad(an) > 0.5, unpad(hl) > 0.5,
             unpad(hr) > 0.5)
+
+
+@partial(jax.jit, static_argnames=("x0", "dx", "length", "qm", "dt",
+                                   "charge", "b", "boundary", "tile_rows",
+                                   "deposit"))
+def fused_push_deposit(x: Array, v: Array, alive: Array, w: Array, e: Array,
+                       *, x0: float, dx: float, length: float, qm: float,
+                       dt: float, charge: float,
+                       b: tuple[float, float, float] = (0.0, 0.0, 0.0),
+                       boundary: str = "periodic", tile_rows: int = 8,
+                       deposit: bool = True):
+    """Single-pass fused cycle (kernels/fused_cycle.py).
+
+    Returns (x, v, alive, hit_left, hit_right, w, rho) — the pushed state
+    plus the POST-push node charge density rho: (ng,)/dx. With
+    ``deposit=False`` the in-kernel deposition is compiled out and rho is
+    all-zero.
+    """
+    cap = x.shape[0]
+    nc = round(length / dx)
+    ng = e.shape[0]
+    xp, vxp, vyp, vzp, ap = _particle_planes(x, v, alive, tile_rows)
+    wp = to_planes(w, tile_rows)
+    ep = plane_pad(e, LANES)[None, :]
+
+    xn, vxn, vyn, vzn, an, hl, hr, wn, rho = _fused.fused_push_deposit_pallas(
+        xp, vxp, vyp, vzp, ap, wp, ep, x0=x0, dx=dx, nc=nc, length=length,
+        qm=qm, dt=dt, charge=charge, b=b, boundary=boundary,
+        tile_rows=tile_rows, interpret=_interpret(), do_deposit=deposit)
+
+    def unpad(p):
+        return from_planes(p, cap)
+
+    v_out = jnp.stack([unpad(vxn), unpad(vyn), unpad(vzn)], axis=-1)
+    return (unpad(xn), v_out, unpad(an) > 0.5, unpad(hl) > 0.5,
+            unpad(hr) > 0.5, unpad(wn), rho[0, :ng] / dx)
 
 
 @partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k"))
@@ -89,8 +115,8 @@ def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
 def deposit(x: Array, q: Array, *, x0: float, dx: float, nc: int,
             ng: int) -> Array:
     """CIC deposition of per-particle charge q at positions x -> (ng,)/dx."""
-    xp = _planes(_pad_to(x, LANES))
-    qp = _planes(_pad_to(q, LANES))          # padded q == 0 -> no deposit
+    xp = to_planes(x, 1)
+    qp = to_planes(q, 1)                     # padded q == 0 -> no deposit
     ng_pad = ng + ((-ng) % LANES)
     rho = _deposit.deposit_pallas(xp, qp, x0=x0, dx=dx, nc=nc, ng_pad=ng_pad,
                                   interpret=_interpret())

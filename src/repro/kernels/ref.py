@@ -65,3 +65,15 @@ def deposit_ref(x, q, *, x0, dx, nc, ng_pad):
     rho = rho.at[i].add(qf * (1.0 - f))
     rho = rho.at[i + 1].add(qf * f)
     return rho[None, :]
+
+
+def fused_push_deposit_ref(x, vx, vy, vz, alive_f, w, e_pad, *, x0, dx, nc,
+                           length, qm, dt, charge, b, boundary, ng_pad):
+    """Oracle for kernels/fused_cycle.py: push oracle then deposit oracle
+    over the post-push state (same planar layout)."""
+    xn, vxn, vyn, vzn, an, hl, hr = mover_push_ref(
+        x, vx, vy, vz, alive_f, e_pad, x0=x0, dx=dx, nc=nc, length=length,
+        qm=qm, dt=dt, b=b, boundary=boundary)
+    wn = w * an
+    rho = deposit_ref(xn, charge * wn, x0=x0, dx=dx, nc=nc, ng_pad=ng_pad)
+    return xn, vxn, vyn, vzn, an, hl, hr, wn, rho

@@ -20,7 +20,29 @@ import math
 
 import jax
 import numpy as np
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+try:                       # jax >= 0.5 exposes explicit-mode axis types
+    from jax.sharding import AxisType
+except ImportError:        # jax 0.4.x: meshes are implicitly Auto everywhere
+    AxisType = None
+
+
+def _axis_type_kw(n_axes: int) -> dict:
+    """axis_types kwarg for Mesh/make_mesh, empty on jax versions without it."""
+    if AxisType is None:
+        return {}
+    return {"axis_types": (AxisType.Auto,) * n_axes}
+
+
+def _make_mesh(shape, axes) -> Mesh:
+    if hasattr(jax, "make_mesh"):
+        try:
+            return jax.make_mesh(shape, axes, **_axis_type_kw(len(axes)))
+        except TypeError:  # make_mesh predates the axis_types kwarg
+            return jax.make_mesh(shape, axes)
+    grid = np.asarray(jax.devices()[:math.prod(shape)]).reshape(shape)
+    return Mesh(grid, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
@@ -29,22 +51,19 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     need = math.prod(shape)
     devs = jax.devices()
     if len(devs) == need:
-        return jax.make_mesh(shape, axes,
-                             axis_types=(AxisType.Auto,) * len(axes))
+        return _make_mesh(shape, axes)
     # dry-run container exposes 512 host devices; a single-pod 256-mesh
     # takes the first 256
     assert len(devs) >= need, (len(devs), need)
     grid = np.asarray(devs[:need]).reshape(shape)
-    return Mesh(grid, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return Mesh(grid, axes, **_axis_type_kw(len(axes)))
 
 
 def make_debug_mesh(data: int = 1, model: int = 1, pod: int = 0) -> Mesh:
     """Small mesh for tests on whatever devices exist."""
     if pod:
-        return jax.make_mesh((pod, data, model), ("pod", "data", "model"),
-                             axis_types=(AxisType.Auto,) * 3)
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+        return _make_mesh((pod, data, model), ("pod", "data", "model"))
+    return _make_mesh((data, model), ("data", "model"))
 
 
 def domain_axes(mesh: Mesh) -> tuple[str, ...]:

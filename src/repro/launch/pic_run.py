@@ -1,7 +1,8 @@
 """PIC launcher: run the paper's scenario, single- or multi-domain.
 
     PYTHONPATH=src python -m repro.launch.pic_run --steps 100 \
-        [--domains 4] [--strategy unified|explicit|async_batched]
+        [--domains 4] [--strategy unified|explicit|async_batched|fused] \
+        [--diag-every K]
 
 --domains > 1 requires that many jax devices (tests use subprocesses with
 xla_force_host_platform_device_count; a TPU slice provides them natively).
@@ -27,18 +28,24 @@ def main() -> None:
     ap.add_argument("--particles", type=int, default=131_072)
     ap.add_argument("--domains", type=int, default=1)
     ap.add_argument("--strategy", default="unified",
-                    choices=["unified", "explicit", "async_batched"])
+                    choices=["unified", "explicit", "async_batched",
+                             "fused"])
+    ap.add_argument("--diag-every", type=int, default=1,
+                    help="compute full diagnostics every K-th step")
     args = ap.parse_args()
 
     cfg = make_bench_config(nc=args.nc, n=args.particles,
-                            strategy=args.strategy)
+                            strategy=args.strategy,
+                            diag_every=args.diag_every)
     t0 = time.perf_counter()
     if args.domains == 1:
         state = pic.init_state(cfg, 0)
         final, diags = jax.block_until_ready(
             jax.jit(lambda s: pic.run(cfg, args.steps, state=s))(state))
-        counts = {k: int(np.asarray(v)[-1]) for k, v in diags.items()
-                  if k.endswith("/count")}
+        # count from the final state, not the diag trace: with
+        # --diag-every K the trace holds zeros on off-steps
+        counts = {f"{sc.name}/count": int(buf.count())
+                  for sc, buf in zip(cfg.species, final.species)}
     else:
         mesh = make_debug_mesh(data=args.domains, model=1)
         dcfg = decomposition.DomainConfig(pic=cfg, axis_names=("data",),

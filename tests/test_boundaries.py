@@ -19,12 +19,11 @@ def _wall_hitters(n, length, toward_left=True):
 def test_emission_yields_expected_count_and_direction():
     g = Grid1D(nc=16, dx=1.0)
     buf = _wall_hitters(512, g.length, toward_left=True)
-    out, diag = mover.push(buf, jnp.zeros(g.ng), g, 1.0, 0.1,
-                           strategy="unified", boundary="absorb")
-    hit_l = jnp.ones(512, bool) & (diag["absorbed_left"] > 0)
-    # reconstruct masks from positions: all went left
-    hl = jnp.ones(512, bool)
-    hr = jnp.zeros(512, bool)
+    res = mover.push(buf, jnp.zeros(g.ng), g, 1.0, 0.1,
+                     strategy="unified", boundary="absorb")
+    # the mover reports the wall masks directly: all went left
+    hl, hr = res.hit_left, res.hit_right
+    assert bool(hl.all()) and not bool(hr.any())
     electrons = make_species(2048)
     params = EmissionParams(yield_=0.5, vth_emit=1.0)
     electrons, ediag = wall_emission(jax.random.PRNGKey(0), buf, hl, hr,
@@ -62,8 +61,8 @@ def test_divertor_power_load_diagnostic():
     x = jnp.full((n,), g.length - 0.05)
     v = jnp.zeros((n, 3)).at[:, 0].set(speed)
     buf = SpeciesBuffer(x=x, v=v, w=jnp.ones(n), alive=jnp.ones(n, bool))
-    out, diag = mover.push(buf, jnp.zeros(g.ng), g, 1.0, 0.1,
-                           strategy="unified", boundary="absorb")
+    diag = mover.push(buf, jnp.zeros(g.ng), g, 1.0, 0.1,
+                      strategy="unified", boundary="absorb").diag
     assert int(diag["absorbed_right"]) == n
     np.testing.assert_allclose(float(diag["power_right"]),
                                n * 0.5 * speed ** 2, rtol=1e-5)

@@ -76,6 +76,39 @@ def test_deposit_matches_oracle(cap, ng):
                                rtol=1e-5)
 
 
+@pytest.mark.parametrize("cap,ng", [(1024, 129), (5000, 257)])  # 5000: pad
+@pytest.mark.parametrize("boundary", ["periodic", "absorb", "open"])
+def test_fused_cycle_matches_oracle(cap, ng, boundary):
+    x, v, alive, e, L, dx = _mk(cap, ng, np.float32, seed=7)
+    w = jnp.asarray(np.random.default_rng(8).random(cap).astype(np.float32))
+    w = w * alive
+    b = (0.05, -0.1, 0.2)
+    xn, vn, an, hl, hr, wn, rho = ops.fused_push_deposit(
+        x, v, alive, w, e, x0=0.0, dx=dx, length=L, qm=-1.0, dt=0.05,
+        charge=-1.0, b=b, boundary=boundary)
+
+    block = 8 * LANES
+    planes = [_pad(a, block).reshape(-1, LANES)
+              for a in (x, v[:, 0], v[:, 1], v[:, 2],
+                        alive.astype(x.dtype), w)]
+    ep = jnp.pad(e, (0, (-ng) % LANES))[None, :]
+    rx, rvx, rvy, rvz, ra, rhl, rhr, rwn, rrho = ref.fused_push_deposit_ref(
+        *planes, ep, x0=0.0, dx=dx, nc=ng - 1, length=L, qm=-1.0, dt=0.05,
+        charge=-1.0, b=b, boundary=boundary, ng_pad=ep.shape[1])
+
+    tol = dict(rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(xn, np.asarray(rx).reshape(-1)[:cap], **tol)
+    np.testing.assert_allclose(wn, np.asarray(rwn).reshape(-1)[:cap], **tol)
+    assert (np.asarray(an) == (np.asarray(ra).reshape(-1)[:cap] > 0.5)).all()
+    assert (np.asarray(hl) == (np.asarray(rhl).reshape(-1)[:cap] > 0.5)).all()
+    assert (np.asarray(hr) == (np.asarray(rhr).reshape(-1)[:cap] > 0.5)).all()
+    np.testing.assert_allclose(rho, np.asarray(rrho)[0, :ng] / dx,
+                               rtol=1e-3, atol=1e-3)
+    # charge conservation: integral of rho equals surviving charge
+    np.testing.assert_allclose(float(jnp.sum(rho) * dx), float(-jnp.sum(wn)),
+                               rtol=1e-4, atol=1e-4)
+
+
 def test_mover_dead_particles_feel_no_field():
     x, v, alive, e, L, dx = _mk(1024, 129, np.float32, seed=5)
     dead = jnp.zeros_like(alive)

@@ -139,16 +139,17 @@ def test_gather_onehot_matches_take():
 
 
 # ---------------------------------------------------------------- mover
-@pytest.mark.parametrize("strategy", ["unified", "explicit", "async_batched"])
+@pytest.mark.parametrize("strategy",
+                         ["unified", "explicit", "async_batched", "fused"])
 def test_mover_strategies_agree(strategy):
     key = jax.random.PRNGKey(7)
     g = Grid1D(nc=128, dx=1.0)
     buf = init_uniform(key, 4096, 4000, g.length, 1.0)
     e = jax.random.normal(jax.random.PRNGKey(8), (g.ng,))
-    ref_out, ref_d = mover.push(buf, e, g, -1.0, 0.1, strategy="unified",
-                                boundary="periodic")
-    out, d = mover.push(buf, e, g, -1.0, 0.1, strategy=strategy,
-                        boundary="periodic")
+    ref_out = mover.push(buf, e, g, -1.0, 0.1, strategy="unified",
+                         boundary="periodic").buf
+    out = mover.push(buf, e, g, -1.0, 0.1, strategy=strategy,
+                     boundary="periodic").buf
     np.testing.assert_allclose(np.asarray(out.x), np.asarray(ref_out.x),
                                rtol=2e-5, atol=2e-5)
     np.testing.assert_allclose(np.asarray(out.v), np.asarray(ref_out.v),
@@ -169,8 +170,8 @@ def test_absorbing_walls_report_power():
     x = jnp.asarray([0.1, 15.9, 8.0])
     v = jnp.asarray([[-5.0, 0, 0], [5.0, 0, 0], [0.1, 0, 0]])
     buf = SpeciesBuffer(x=x, v=v, w=jnp.ones(3), alive=jnp.ones(3, bool))
-    out, diag = mover.push(buf, jnp.zeros(g.ng), g, 1.0, 0.1,
-                           strategy="unified", boundary="absorb")
+    out, _, _, diag, _ = mover.push(buf, jnp.zeros(g.ng), g, 1.0, 0.1,
+                                    strategy="unified", boundary="absorb")
     assert int(diag["absorbed_left"]) == 1
     assert int(diag["absorbed_right"]) == 1
     assert int(out.count()) == 1
