@@ -1,63 +1,108 @@
-"""Paper Fig. 4 analogue: mover strong scaling with domain count.
+"""Paper Tables 2-4 / Fig. 4 analogue: engine scaling with domain count.
 
-The paper scales BIT1's optimized mover to 128 MPI ranks on Dardel. Here
-the domain decomposition runs on D in {1, 2, 4, 8} emulated devices in
-subprocesses (the container exposes one physical core, so this measures
-harness overhead/correctness, not parallel speedup — recorded as such in
-EXPERIMENTS.md)."""
+The paper scales BIT1's optimized mover to 400 GPUs and reports per-phase
+Nsight times, speedup and parallel efficiency PE = T1/(D*TD). Here the
+asynchronous multi-device engine (``repro.distributed``) runs on D emulated
+host devices in subprocesses, and ``perf.phase_breakdown`` produces the
+per-phase table per domain count; speedup/PE land in the machine-readable
+``BENCH_scaling.json`` (the container exposes two physical cores, so this
+measures harness overhead/correctness, not parallel speedup — the JSON
+records the environment so the numbers are never mistaken for the paper's).
+"""
 
 from __future__ import annotations
 
+import json
 import os
 import subprocess
 import sys
-import textwrap
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
-_PROG = textwrap.dedent("""
-    import os
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%d"
-    import time
-    import jax
-    from repro.core import decomposition, pic
-    from repro.configs.pic_bit1 import make_bench_config
-    from repro.launch.mesh import make_debug_mesh
+_PROG = """
+import json
+from repro.configs.pic_bit1 import make_bench_config
+from repro.distributed import engine, perf
+from repro.launch.mesh import make_debug_mesh
+import dataclasses
 
-    d = %d
-    mesh = make_debug_mesh(data=d, model=1)
-    cfg = make_bench_config(nc=4096, n=131072)
-    dcfg = decomposition.DomainConfig(pic=cfg, axis_names=("data",),
-                                      max_migration=8192)
-    state = decomposition.init_distributed_state(dcfg, mesh, 0)
-    step = decomposition.make_distributed_step(dcfg, mesh)
-    state, _ = step(state)   # compile + warmup
-    jax.block_until_ready(state.species[0].x)
-    t0 = time.perf_counter()
-    iters = 5
-    for _ in range(iters):
-        state, diag = step(state)
-    jax.block_until_ready(state.species[0].x)
-    us = (time.perf_counter() - t0) / iters * 1e6
-    print("RESULT %%0.1f" %% us)
-""")
+p = json.loads(%r)
+mesh = make_debug_mesh(data=p["d"], model=1)
+cfg = make_bench_config(nc=p["nc"], n=p["n"], strategy="fused")
+# enable the halo field phase so the 'field' row measures the distributed
+# solve (the paper's own benchmark disables it; conservation is unaffected)
+cfg = dataclasses.replace(cfg, field_solve=True, ionization=None)
+ecfg = engine.EngineConfig(pic=cfg, axis_names=("data",),
+                           max_migration=p["m"], async_n=p["async_n"])
+phases = perf.phase_breakdown(ecfg, mesh, iters=p["iters"], warmup=1)
+print("RESULTJSON " + json.dumps(phases))
+"""
+
+
+def _measure(d: int, *, nc: int, n: int, async_n: int, iters: int,
+             max_migration: int) -> dict | None:
+    params = json.dumps(dict(d=d, nc=nc, n=n, async_n=async_n, iters=iters,
+                             m=max_migration))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={d}"
+    out = subprocess.run([sys.executable, "-c", _PROG % params], env=env,
+                         capture_output=True, text=True, timeout=900)
+    for line in out.stdout.splitlines():
+        if line.startswith("RESULTJSON "):
+            return json.loads(line[len("RESULTJSON "):])
+    print(f"# domains={d} FAILED:\n{out.stderr[-2000:]}", file=sys.stderr)
+    return None
+
+
+def run(domains=(1, 2, 4, 8), *, nc: int = 4096, n: int = 131_072,
+        async_n: int = 2, iters: int = 5, max_migration: int = 8192,
+        json_path: str = "BENCH_scaling.json",
+        mode: str = "full") -> list[str]:
+    from repro.distributed import perf
+
+    per_domain = {}
+    for d in domains:
+        phases = _measure(d, nc=nc, n=n, async_n=async_n, iters=iters,
+                          max_migration=max_migration)
+        if phases is not None:
+            per_domain[d] = phases
+    if not per_domain:
+        # every subprocess died: surface it instead of exiting 0 with no JSON
+        raise RuntimeError(
+            f"engine scaling bench produced no results for domains={domains}"
+            f" (see stderr above for per-domain failures)")
+    rows = []
+    if per_domain:
+        metrics = perf.scaling_metrics(per_domain)
+        payload = {
+            "mode": mode,
+            "async_n": async_n,
+            "config": {"nc": nc, "n_per_species": n, "iters": iters,
+                       "max_migration": max_migration},
+            "environment": "emulated host devices, 2-core CPU container "
+                           "(harness overhead, not hardware scaling)",
+            "domains": {str(d): metrics[d] for d in metrics},
+        }
+        perf.write_scaling_json(json_path, payload)
+        for d in sorted(metrics):
+            m = metrics[d]
+            rows.append(
+                f"engine_step/domains={d};async_n={async_n},"
+                f"{m['phases']['total']:.1f},"
+                f"speedup={m['speedup']:.2f};pe="
+                f"{m['parallel_efficiency']:.2f}")
+    return rows
+
+
+def smoke(json_path: str = "BENCH_scaling.json") -> list[str]:
+    """CI-sized scaling sweep: small grid, D in {1, 2, 4}, 2 iters."""
+    return run((1, 2, 4), nc=512, n=16_384, async_n=2, iters=2,
+               max_migration=2048, json_path=json_path, mode="smoke")
 
 
 def main() -> list[str]:
-    rows = []
-    for d in (1, 2, 4, 8):
-        env = dict(os.environ)
-        env["PYTHONPATH"] = SRC
-        out = subprocess.run([sys.executable, "-c", _PROG % (d, d)],
-                             env=env, capture_output=True, text=True,
-                             timeout=900)
-        us = "NaN"
-        for line in out.stdout.splitlines():
-            if line.startswith("RESULT"):
-                us = line.split()[1]
-        rows.append(f"distributed_step/domains={d},{us},"
-                    f"1core_container")
-    return rows
+    return run()
 
 
 if __name__ == "__main__":

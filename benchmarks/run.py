@@ -10,9 +10,10 @@
 
 The mover-strategy results are also written as machine-readable JSON
 (default ``BENCH_mover.json``) so successive PRs accumulate a perf
-trajectory. ``--smoke`` runs only the mover benchmark at a reduced size
-(finishes in well under 30 s on 2 CPU cores — the CI configuration, see
-``scripts/ci.sh``).
+trajectory, and the distributed-engine scaling sweep writes per-phase
+times + speedup/PE to ``BENCH_scaling.json``. ``--smoke`` runs the mover
+benchmark at a reduced size plus a small scaling sweep (the CI
+configuration, see ``scripts/ci.sh``).
 """
 
 from __future__ import annotations
@@ -36,6 +37,8 @@ def main() -> None:
                     help="fast CI mode: mover benchmark only, small N")
     ap.add_argument("--json", default="BENCH_mover.json",
                     help="where to write the mover-strategy results")
+    ap.add_argument("--scaling-json", default="BENCH_scaling.json",
+                    help="where to write the engine scaling results")
     args = ap.parse_args()
 
     from benchmarks import bench_mover_strategies
@@ -48,6 +51,9 @@ def main() -> None:
             print(f"smoke_strategies/{r}", flush=True)
         results["mode"] = "smoke"
         _write_json(args.json, results)
+        from benchmarks import bench_scaling
+        for r in bench_scaling.smoke(args.scaling_json):
+            print(f"smoke_scaling/{r}", flush=True)
         return
 
     from benchmarks import (bench_hybrid_total, bench_ionization, bench_lm,

@@ -1,13 +1,21 @@
 #!/usr/bin/env bash
-# CI entry point: tier-1 tests + the smoke perf benchmark.
+# CI entry point: tier-1 tests + multi-device lane + smoke perf benchmarks.
 #
-# The smoke benchmark runs the mover-strategy suite at small N (<30 s on a
-# 2-core CPU container) and writes BENCH_smoke.json; the full-size results
-# that gate perf PRs live in BENCH_mover.json (python -m benchmarks.run).
+# Lane 1: the full tier-1 suite on the default single device (multi-device
+#         tests spawn their own emulated-device subprocesses).
+# Lane 2: the distributed-engine parity tests again with 4 emulated host
+#         devices IN-process (XLA_FLAGS) — exercises shard_map collectives
+#         without the subprocess indirection.
+# Lane 3: the smoke benchmarks: mover strategies (BENCH_smoke.json) and the
+#         engine scaling sweep with per-phase times + speedup/PE
+#         (BENCH_scaling.json). Full-size results that gate perf PRs live in
+#         BENCH_mover.json / BENCH_scaling.json (python -m benchmarks.run).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 python -m pytest -x -q
+XLA_FLAGS="--xla_force_host_platform_device_count=4" \
+    python -m pytest -x -q tests/test_async_engine.py
 python -m benchmarks.run --smoke --json BENCH_smoke.json

@@ -1,63 +1,40 @@
-"""Domain decomposition under shard_map — BIT1's MPI layer, TPU-native.
+"""Back-compat shim over ``repro.distributed`` — BIT1's MPI layer, TPU-native.
 
-BIT1 splits the 1-D grid across MPI ranks and exchanges boundary-crossing
-particles with point-to-point sends. Here each mesh device owns a contiguous
-slab of ``nc_global / D`` cells plus its particles; crossers are packed into
-fixed-size send buffers and moved with ``jax.lax.ppermute`` — the ICI
-collective-permute that is the TPU analogue of MPI p2p (DESIGN.md §2).
+The domain-decomposed PIC step moved to the asynchronous multi-device engine
+in ``repro/distributed/`` (async(n) queue scheduler in ``engine.py``,
+halo-exchange field phase in ``halo.py``, per-phase perf instrumentation in
+``perf.py``). This module keeps the seed's public API — ``DomainConfig``,
+``make_distributed_step``, ``init_distributed_state`` — delegating to the
+engine with ``async_n=1``, so existing callers (launcher, dry-run, tests)
+keep working unchanged.
 
-Positions are stored in *local* slab coordinates [0, L_local): migration
-shifts x by ±L_local into the receiver's frame, which keeps all arithmetic
-rank-independent (no traced grid offsets) and preserves float resolution on
-long global domains.
+Differences from the seed implementation, inherited from the engine:
 
-Asynchrony (the assigned title's contribution): the per-species loop issues
-each species' migration ppermute immediately after its push and *merges all
-received buffers only after every species has been pushed* — the collective
-for species s has no data dependency on the push of species s+1, so XLA's
-latency-hiding scheduler overlaps communication with compute, exactly the
-role of CUDA streams in the paper's multi-GPU version.
-
-State layout: every per-domain array carries a leading ``D`` axis sharded
-over the mesh domain axes; inside ``shard_map`` each device sees a (1, ...)
-slice and squeezes it.
+* migration overflow no longer loses particles: crossers that exceed the
+  ``max_migration`` pack stay local (clamped, retried next step) and are
+  reported via the ``migration_overflow`` diagnostic;
+* the field phase is halo-based (edge-node ``ppermute`` + scalar-gather
+  prefix Poisson) — the O(D * ng_local) full-rho ``all_gather`` and the
+  redundant per-device global solve are gone;
+* all species are pushed through the stacked vmap'd mover (the
+  ``PICConfig.strategy`` choice still controls the carried in-pass deposit
+  via ``'fused'``);
+* the step donates its state buffers (rebind, as in ``state, d = step(state)``).
 """
 
 from __future__ import annotations
 
 import dataclasses
-import inspect
-from functools import partial
 
-import jax
-import jax.numpy as jnp
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh
 
-try:                                   # jax >= 0.6: public top-level API
-    from jax import shard_map as _shard_map_impl
-except ImportError:                    # jax 0.4.x: experimental namespace
-    from jax.experimental.shard_map import shard_map as _shard_map_impl
-
-# the replication-checking kwarg was renamed check_rep -> check_vma; probe the
-# installed signature once and translate so call sites stay version-agnostic
-_SHARD_MAP_CHECK_KW = (
-    "check_vma"
-    if "check_vma" in inspect.signature(_shard_map_impl).parameters
-    else "check_rep")
-
-
-def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
-    kw = {_SHARD_MAP_CHECK_KW: check_vma}
-    return _shard_map_impl(f, mesh=mesh, in_specs=in_specs,
-                           out_specs=out_specs, **kw)
-
-from repro.core import collisions, diagnostics, fields, mover
-from repro.core.grid import Grid1D, deposit
-from repro.core.particles import (SpeciesBuffer, inject, init_uniform, kill,
-                                  take)
 from repro.core.pic import PICConfig, PICState
-
-Array = jax.Array
+from repro.distributed import engine as _engine
+# re-exported for back-compat: the version-agnostic shard_map wrapper and
+# ring helpers now live with the communication layer
+from repro.distributed.halo import (ppermute_tree as _ppermute_tree,  # noqa: F401
+                                    rank as _rank, ring_perm as _nperm,
+                                    shard_map)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -68,270 +45,28 @@ class DomainConfig:
     max_migration: int = 2048            # per species/direction/step
     species_capacity_local: int | None = None  # default: global cap / D
 
+    def to_engine(self, async_n: int = 1) -> _engine.EngineConfig:
+        return _engine.EngineConfig(
+            pic=self.pic, axis_names=tuple(self.axis_names),
+            async_n=async_n, max_migration=self.max_migration,
+            species_capacity_local=self.species_capacity_local)
+
     def num_domains(self, mesh: Mesh) -> int:
-        n = 1
-        for a in self.axis_names:
-            n *= mesh.shape[a]
-        return n
+        return self.to_engine().num_domains(mesh)
 
     def local_nc(self, mesh: Mesh) -> int:
-        d = self.num_domains(mesh)
-        assert self.pic.nc % d == 0, (self.pic.nc, d)
-        return self.pic.nc // d
+        return self.to_engine().local_nc(mesh)
 
     def local_cap(self, sc, mesh: Mesh) -> int:
-        if self.species_capacity_local is not None:
-            return self.species_capacity_local
-        d = self.num_domains(mesh)
-        assert sc.capacity % d == 0
-        return sc.capacity // d
-
-
-def _axis_size(a: str):
-    if hasattr(jax.lax, "axis_size"):        # jax >= 0.5
-        return jax.lax.axis_size(a)
-    return jax.lax.psum(1, a)                # 0.4.x: psum of 1 == axis size
-
-
-def _rank(axis_names) -> Array:
-    """Linearized domain index over possibly-multiple mesh axes."""
-    r = jnp.zeros((), jnp.int32)
-    for a in axis_names:
-        r = r * _axis_size(a) + jax.lax.axis_index(a)
-    return r
-
-
-def _nperm(axis_names, shift: int, mesh: Mesh):
-    """Ring permutation over the linearized domain axes."""
-    d = 1
-    for a in axis_names:
-        d *= mesh.shape[a]
-    return [(i, (i + shift) % d) for i in range(d)]
-
-
-def _ppermute_tree(tree, axis_names, shift: int, mesh: Mesh):
-    perm = _nperm(axis_names, shift, mesh)
-    # linearized multi-axis ppermute: collapse axes by permuting on the tuple
-    return jax.tree.map(
-        lambda a: jax.lax.ppermute(a, axis_names, perm), tree)
-
-
-def exchange_species(buf: SpeciesBuffer, l_local: float, dcfg: DomainConfig,
-                     mesh: Mesh, is_first: Array, is_last: Array
-                     ) -> tuple[SpeciesBuffer, SpeciesBuffer, SpeciesBuffer,
-                                dict]:
-    """Pack crossers and ppermute them; returns (kept, recv_l, recv_r, diag).
-
-    recv_l is what arrived from the LEFT neighbor (it sent right), recv_r
-    from the RIGHT. Merging is the caller's job (to allow overlap).
-    """
-    m = dcfg.max_migration
-    boundary = dcfg.pic.boundary
-    go_l = buf.alive & (buf.x < 0.0)
-    go_r = buf.alive & (buf.x >= l_local)
-
-    if boundary == "absorb":           # global walls absorb at edge domains
-        absorb_l = go_l & is_first
-        absorb_r = go_r & is_last
-        send_l = go_l & ~is_first
-        send_r = go_r & ~is_last
-    else:                              # global periodic: ring wraps
-        absorb_l = jnp.zeros_like(go_l)
-        absorb_r = jnp.zeros_like(go_r)
-        send_l, send_r = go_l, go_r
-
-    # §Perf: ONE full-capacity packing scan for both directions (a particle
-    # crosses at most one boundary), then split the 2m-element pack — the
-    # full-array cumsum inside nonzero is the expensive part (EXPERIMENTS.md
-    # §Perf PIC iter 2); the per-direction split runs on 2m elements only.
-    go_any = send_l | send_r
-    idx = jnp.nonzero(go_any, size=2 * m, fill_value=buf.capacity)[0]
-    packed = take(buf, idx)
-    went_l = packed.alive & (packed.x < 0.0)
-    went_r = packed.alive & (packed.x >= l_local)
-    idx_l = jnp.nonzero(went_l, size=m, fill_value=2 * m)[0]
-    idx_r = jnp.nonzero(went_r, size=m, fill_value=2 * m)[0]
-    pack_l = take(packed, idx_l)
-    pack_r = take(packed, idx_r)
-    # shift into the receiver's local frame
-    pack_l = dataclasses.replace(pack_l, x=pack_l.x + l_local)
-    pack_r = dataclasses.replace(pack_r, x=pack_r.x - l_local)
-
-    kept = kill(buf, go_l | go_r)      # sent or wall-absorbed both leave
-
-    recv_r = _ppermute_tree(pack_l, dcfg.axis_names, -1, mesh)  # from right
-    recv_l = _ppermute_tree(pack_r, dcfg.axis_names, +1, mesh)  # from left
-
-    n_l = jnp.sum(send_l.astype(jnp.int32))
-    n_r = jnp.sum(send_r.astype(jnp.int32))
-    diag = {
-        "migrated_left": n_l,
-        "migrated_right": n_r,
-        "migration_overflow": jnp.maximum(n_l - m, 0) + jnp.maximum(
-            n_r - m, 0),
-        "wall_absorbed": jnp.sum((absorb_l | absorb_r).astype(jnp.int32)),
-    }
-    return kept, recv_l, recv_r, diag
-
-
-def merge_received(buf: SpeciesBuffer, recv_l: SpeciesBuffer,
-                   recv_r: SpeciesBuffer) -> tuple[SpeciesBuffer, Array]:
-    # single combined inject: one free-slot scan instead of two (§Perf —
-    # the slot scans are full-capacity cumsums and dominate PIC HBM traffic
-    # after the mover itself)
-    xs = jnp.concatenate([recv_l.x, recv_r.x])
-    vs = jnp.concatenate([recv_l.v, recv_r.v])
-    ws = jnp.concatenate([recv_l.w, recv_r.w])
-    alive = jnp.concatenate([recv_l.alive, recv_r.alive])
-    return inject(buf, xs, vs, ws, alive)
-
-
-def global_field(cfg: PICConfig, species, grid_local: Grid1D,
-                 dcfg: DomainConfig, mesh: Mesh) -> Array:
-    """Distributed field phase: local deposit -> halo-correct global rho ->
-    redundant global solve -> local E slab (with shared edge nodes)."""
-    ngl = grid_local.ng
-    rho_local = jnp.zeros((ngl,), jnp.float32)
-    for sc, buf in zip(cfg.species, species):
-        if sc.charge != 0.0:
-            rho_local = rho_local + deposit(grid_local, buf, sc.charge)
-    # assemble global node array: domain r contributes nodes [r*ncl, r*ncl+ncl]
-    gathered = jax.lax.all_gather(rho_local, dcfg.axis_names, tiled=False)
-    gathered = gathered.reshape(-1, ngl)              # (D, ngl)
-    d = gathered.shape[0]
-    ncl = ngl - 1
-    ng_global = d * ncl + 1
-    rho_g = jnp.zeros((ng_global,), jnp.float32)
-    starts = jnp.arange(d) * ncl
-    idx = starts[:, None] + jnp.arange(ngl)[None, :]
-    rho_g = rho_g.at[idx.reshape(-1)].add(gathered.reshape(-1))
-    rho_g = fields.smooth_binomial(rho_g, cfg.smoothing_passes)
-    phi = fields.solve_poisson(rho_g, cfg.dx, cfg.eps0)
-    e_g = fields.efield(phi, cfg.dx)
-    r = _rank(dcfg.axis_names)
-    return jax.lax.dynamic_slice(e_g, (r * ncl,), (ngl,))
+        return self.to_engine().local_cap(sc, mesh)
 
 
 def make_distributed_step(dcfg: DomainConfig, mesh: Mesh):
-    """Build the shard_map'd PIC step for the given mesh."""
-    cfg = dcfg.pic
-    ncl = dcfg.local_nc(mesh)
-    grid_local = Grid1D(nc=ncl, dx=cfg.dx)
-    l_local = ncl * cfg.dx
-    d = dcfg.num_domains(mesh)
-
-    # every mesh axis not carrying domains replicates PIC state
-    spec_particles = P(dcfg.axis_names)
-    specs_state = PICState(
-        species=tuple(
-            SpeciesBuffer(x=spec_particles, v=spec_particles,
-                          w=spec_particles, alive=spec_particles)
-            for _ in cfg.species),
-        key=spec_particles, step=P())
-
-    def local_step(state: PICState) -> tuple[PICState, dict]:
-        species = tuple(
-            jax.tree.map(lambda a: a[0], b) for b in state.species)
-        key = state.key[0]
-        r = _rank(dcfg.axis_names)
-        is_first = r == 0
-        is_last = r == d - 1
-
-        e = (global_field(cfg, species, grid_local, dcfg, mesh)
-             if cfg.field_solve else jnp.zeros((ncl + 1,), jnp.float32))
-
-        diag: dict = {}
-        pushed, pending = [], []
-        # --- C4 async pipeline: push species s, issue its migration
-        #     collective, then push species s+1 while s's permute flies ---
-        for sc, buf in zip(cfg.species, species):
-            qm = sc.charge / sc.mass
-            kw = dict(b=cfg.b_field, boundary="open")
-            if cfg.strategy == "async_batched":
-                kw["num_batches"] = cfg.num_batches
-            if cfg.strategy != "explicit":
-                kw["gather_mode"] = cfg.gather_mode
-            res = mover.push(buf, e, grid_local, qm, cfg.dt * sc.stride,
-                             strategy=cfg.strategy, **kw)
-            out, dpush = res.buf, res.diag
-            kept, recv_l, recv_r, dmig = exchange_species(
-                out, l_local, dcfg, mesh, is_first, is_last)
-            pushed.append(kept)
-            pending.append((recv_l, recv_r))
-            diag.update({f"{sc.name}/{k}": v for k, v in {**dpush,
-                                                          **dmig}.items()})
-
-        # --- merge everything that arrived ---
-        merged = []
-        for sc, kept, (rl, rr) in zip(cfg.species, pushed, pending):
-            buf, dropped = merge_received(kept, rl, rr)
-            merged.append(buf)
-            diag[f"{sc.name}/merge_dropped"] = dropped
-        species = tuple(merged)
-
-        if cfg.ionization is not None:
-            ni, ei, ii = cfg.ionization
-            key, sub = jax.random.split(key)
-            sub = jax.random.fold_in(sub, r)
-            params = collisions.IonizationParams(
-                rate=cfg.ionization_rate, vth_electron=cfg.ionization_vth_e)
-            neu, ele, ion, dion = collisions.ionize(
-                sub, species[ni], species[ei], species[ii], grid_local,
-                params, cfg.dt)
-            lst = list(species)
-            lst[ni], lst[ei], lst[ii] = neu, ele, ion
-            species = tuple(lst)
-            diag.update(dion)
-
-        # global diagnostics (psum over domains)
-        for sc, buf in zip(cfg.species, species):
-            diag[f"{sc.name}/count"] = buf.count()
-            diag[f"{sc.name}/ke"] = diagnostics.kinetic_energy(buf, sc.mass)
-        diag = {k: jax.lax.psum(v, dcfg.axis_names) for k, v in diag.items()}
-
-        out_state = PICState(
-            species=tuple(jax.tree.map(lambda a: a[None], b)
-                          for b in species),
-            key=key[None], step=state.step + 1)
-        return out_state, diag
-
-    step = shard_map(
-        local_step, mesh=mesh,
-        in_specs=(specs_state,),
-        out_specs=(specs_state, P()),
-        check_vma=False)
-    return jax.jit(step)
+    """Build the shard_map'd PIC step for the given mesh (async_n=1)."""
+    return _engine.make_engine_step(dcfg.to_engine(), mesh)
 
 
 def init_distributed_state(dcfg: DomainConfig, mesh: Mesh,
                            seed: int = 0) -> PICState:
     """Per-domain local init, sharded over the mesh domain axes."""
-    cfg = dcfg.pic
-    ncl = dcfg.local_nc(mesh)
-    l_local = ncl * cfg.dx
-    d = dcfg.num_domains(mesh)
-
-    def local_init() -> PICState:
-        r = _rank(dcfg.axis_names)
-        key = jax.random.fold_in(jax.random.PRNGKey(seed), r)
-        keys = jax.random.split(key, len(cfg.species) + 1)
-        bufs = []
-        for i, sc in enumerate(cfg.species):
-            cap_l = dcfg.local_cap(sc, mesh)
-            n_l = sc.n_init // d
-            b = init_uniform(keys[i], cap_l, n_l, l_local, sc.vth, sc.drift,
-                             sc.weight)
-            bufs.append(jax.tree.map(lambda a: a[None], b))
-        return PICState(species=tuple(bufs), key=keys[-1][None],
-                        step=jnp.zeros((), jnp.int32))
-
-    spec_particles = P(dcfg.axis_names)
-    specs_state = PICState(
-        species=tuple(
-            SpeciesBuffer(x=spec_particles, v=spec_particles,
-                          w=spec_particles, alive=spec_particles)
-            for _ in cfg.species),
-        key=spec_particles, step=P())
-    init = shard_map(local_init, mesh=mesh, in_specs=(),
-                     out_specs=specs_state, check_vma=False)
-    return jax.jit(init)()
+    return _engine.init_engine_state(dcfg.to_engine(), mesh, seed)

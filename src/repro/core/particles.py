@@ -180,13 +180,16 @@ def free_slots(buf: SpeciesBuffer, max_n: int) -> Array:
     return jnp.nonzero(~buf.alive, size=max_n, fill_value=buf.capacity)[0]
 
 
-def inject(buf: SpeciesBuffer, x: Array, v: Array, w: Array,
-           mask: Array) -> tuple[SpeciesBuffer, Array]:
+def inject_masked(buf: SpeciesBuffer, x: Array, v: Array, w: Array,
+                  mask: Array) -> tuple[SpeciesBuffer, Array, Array]:
     """Write ``mask``-selected new particles into dead slots.
 
-    x/v/w/mask have a fixed candidate length M. Returns (buffer, n_dropped):
-    candidates that find no free slot are dropped and counted — BIT1 would
-    realloc its lists; a fixed-capacity buffer surfaces the overflow instead.
+    x/v/w/mask have a fixed candidate length M. Returns
+    (buffer, n_dropped, accepted): candidates that find no free slot are
+    dropped and counted — BIT1 would realloc its lists; a fixed-capacity
+    buffer surfaces the overflow instead. ``accepted`` marks the candidates
+    that landed (the distributed engine deposits exactly those into the
+    carried charge density).
     """
     m = x.shape[0]
     # rank of each candidate among the selected ones
@@ -202,6 +205,13 @@ def inject(buf: SpeciesBuffer, x: Array, v: Array, w: Array,
         alive=buf.alive.at[dest].set(True, mode="drop"),
     )
     n_dropped = jnp.sum((mask & ~ok).astype(jnp.int32))
+    return out, n_dropped, ok
+
+
+def inject(buf: SpeciesBuffer, x: Array, v: Array, w: Array,
+           mask: Array) -> tuple[SpeciesBuffer, Array]:
+    """``inject_masked`` without the accepted mask (the common case)."""
+    out, n_dropped, _ = inject_masked(buf, x, v, w, mask)
     return out, n_dropped
 
 

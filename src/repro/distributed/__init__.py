@@ -1,0 +1,41 @@
+"""Asynchronous multi-device PIC engine (the paper's §4, TPU/JAX-native).
+
+Concept map — how the paper's OpenMP/OpenACC asynchrony constructs land on
+JAX/XLA primitives in this package:
+
+=====================  =====================================================
+Paper construct        JAX construct here
+=====================  =====================================================
+MPI rank / subdomain   mesh device under ``shard_map`` (``engine.py``); each
+                       owns ``nc_global / D`` cells + its particle slabs
+async(n) queues        ``EngineConfig.async_n`` interleaved slices of the
+                       stacked (S, cap) particle buffer; a Python loop emits
+                       one fused push + one migration ``ppermute`` per queue
+``nowait``             queue k+1's push has no data dependency on queue k's
+                       ``ppermute``, so XLA's latency-hiding scheduler
+                       overlaps the collective with compute
+``depend(in/out)``     the received packs are held as live SSA values
+                       (double-buffered) and consumed only by the deferred
+                       merge — the data-flow edges ARE the depend clauses
+MPI_Isend/Irecv        ``jax.lax.ppermute`` of fixed-size send packs
+MPI_Allgather (field)  eliminated: ``halo.py`` exchanges edge nodes with
+                       ``ppermute`` and distributes the exact double-prefix
+                       Poisson solve with scalar-only gathers
+Nsight phase ranges    ``perf.phase_breakdown`` cumulative-checkpoint probes;
+                       speedup + PE tables in ``BENCH_scaling.json``
+=====================  =====================================================
+
+``core/decomposition.py`` remains as a thin back-compat shim over this
+package (same DomainConfig / make_distributed_step / init_distributed_state
+API, async_n=1).
+"""
+
+from repro.distributed.engine import (EngineConfig, PHASES, init_engine_state,
+                                      make_engine_step)
+from repro.distributed.perf import (phase_breakdown, scaling_metrics,
+                                    write_scaling_json)
+
+__all__ = [
+    "EngineConfig", "PHASES", "init_engine_state", "make_engine_step",
+    "phase_breakdown", "scaling_metrics", "write_scaling_json",
+]

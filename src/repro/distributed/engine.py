@@ -1,0 +1,472 @@
+"""Asynchronous multi-device PIC engine — the paper's async(n) queues in JAX.
+
+The paper (§4) overlaps particle migration with compute by splitting each
+GPU's particles across ``async(n)`` OpenACC queues / OpenMP ``nowait`` tasks
+with ``depend`` clauses: while queue *k*'s MPI exchange is on the wire,
+queue *k+1* runs the mover. The JAX mapping:
+
+* a **queue** is an interleaved slice of the stacked (S, cap) particle
+  buffer (slot ``c`` belongs to queue ``c % async_n``, so the initial
+  contiguous live block spreads evenly);
+* queue *k*'s migration ``ppermute`` is issued immediately after its fused
+  push, and queue *k+1*'s push has **no data dependency** on it — XLA's
+  latency-hiding scheduler overlaps the collective with the next push,
+  exactly what ``nowait`` buys the paper (and what CUDA streams buy its
+  multi-GPU version);
+* the received packs are **double-buffered**: they are held as live values
+  (``depend(in)`` edges) while later queues compute, and merged into the
+  free slots only after every queue of every species group has been pushed.
+
+The per-step phase order matches BIT1's cycle: halo field solve (see
+``halo.py`` — no full-rho all_gather) -> per-queue fused push+deposit ->
+per-queue migration exchange -> deferred merge -> MC collisions ->
+diagnostics psum.
+
+Migration overflow (fixed here, vs the seed's ``exchange_species``): every
+boundary crosser used to be killed even when the fixed-size pack truncated,
+silently losing particles and charge. Now only the crossers that actually
+won a pack slot (and, per direction, a send-budget slot) leave; the rest
+stay local — clamped just inside the slab so the next gather is in-bounds —
+and retry next step, reported via the ``migration_overflow`` diagnostic.
+
+Carried charge (``strategy='fused'``): the in-pass deposit of each queue is
+accumulated into one local rho, corrected by subtracting the leavers' edge
+deposits and adding the accepted arrivals' — so the next step's field solve
+never re-reads the full particle arrays. Charge is conserved exactly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import collisions, diagnostics, mover
+from repro.core.grid import Grid1D, deposit_stacked, deposit_windowed
+from repro.core.particles import (SpeciesBuffer, StackedSpecies, init_uniform,
+                                  inject_masked, kill, stack_species, take)
+from repro.core.pic import PICConfig, PICState
+from repro.core.pic import _carries_rho as pic_carries_rho
+from repro.distributed import halo
+
+Array = jax.Array
+
+# cumulative phase checkpoints for the perf probes (see perf.py): a step
+# built with upto=<phase> executes the pipeline through that phase and
+# returns, so consecutive differences give per-phase wall times
+PHASES = ("field", "push", "migrate", "merge", "full")
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Decomposition + queue schedule of a global PICConfig.
+
+    ``async_n`` is the paper's async(n): the number of migration/compute
+    queues each domain's particles are split into. ``max_migration`` is the
+    per-species/per-direction/per-step send budget for the whole domain,
+    split evenly across queues.
+    """
+    pic: PICConfig                       # cfg.nc == GLOBAL cell count
+    axis_names: tuple[str, ...] = ("data",)
+    async_n: int = 1
+    max_migration: int = 2048            # per species/direction/step
+    species_capacity_local: int | None = None  # default: global cap / D
+
+    def __post_init__(self):
+        object.__setattr__(self, "axis_names", tuple(self.axis_names))
+        if self.async_n < 1:
+            raise ValueError(f"async_n must be >= 1, got {self.async_n}")
+        if self.max_migration % self.async_n != 0:
+            raise ValueError(
+                f"async_n ({self.async_n}) must divide max_migration "
+                f"({self.max_migration}) so every queue gets an equal "
+                f"send budget")
+        if self.pic.wall_emission:
+            raise ValueError(
+                "the distributed engine does not implement the wall-emission"
+                " source yet; run plasma-wall emission single-domain")
+
+    def num_domains(self, mesh: Mesh) -> int:
+        n = 1
+        for a in self.axis_names:
+            n *= mesh.shape[a]
+        return n
+
+    def local_nc(self, mesh: Mesh) -> int:
+        d = self.num_domains(mesh)
+        assert self.pic.nc % d == 0, (self.pic.nc, d)
+        return self.pic.nc // d
+
+    def local_cap(self, sc, mesh: Mesh) -> int:
+        if self.species_capacity_local is not None:
+            return self.species_capacity_local
+        d = self.num_domains(mesh)
+        assert sc.capacity % d == 0
+        return sc.capacity // d
+
+    @property
+    def queue_migration(self) -> int:
+        return self.max_migration // self.async_n
+
+
+def _carries_rho(ecfg: EngineConfig) -> bool:
+    """The carried in-pass deposit is exact only when nothing changes the
+    charge after the migration merge — the single-domain step's rule, reused
+    so the two paths can never diverge (wall emission, the one clause that
+    differs structurally, is rejected by EngineConfig outright)."""
+    return pic_carries_rho(ecfg.pic)
+
+
+def _capacity_groups(ecfg: EngineConfig, mesh: Mesh) -> list[tuple[int, ...]]:
+    """Species indices grouped by equal local capacity: each group is one
+    StackedSpecies and one set of async queues."""
+    by_cap: dict[int, list[int]] = {}
+    for i, sc in enumerate(ecfg.pic.species):
+        by_cap.setdefault(ecfg.local_cap(sc, mesh), []).append(i)
+    return [tuple(v) for v in by_cap.values()]
+
+
+def _split_queues(st: StackedSpecies, n: int) -> list[StackedSpecies]:
+    """Interleaved queue views: slot c -> queue c % n (keeps the initial
+    contiguous live block evenly spread across queues)."""
+    if n == 1:
+        return [st]
+
+    def sp(a):
+        s, cap = a.shape[:2]
+        return a.reshape((s, cap // n, n) + a.shape[2:])
+
+    parts = jax.tree.map(sp, st)
+    return [jax.tree.map(lambda a: a[:, :, k], parts) for k in range(n)]
+
+
+def _merge_queues(queues: list, n: int):
+    """Inverse of ``_split_queues`` (works on any matching pytrees)."""
+    if n == 1:
+        return queues[0]
+
+    def mg(*xs):
+        stacked = jnp.stack(xs, axis=2)          # (S, capq, n, ...)
+        s, capq = stacked.shape[:2]
+        return stacked.reshape((s, capq * n) + stacked.shape[3:])
+
+    return jax.tree.map(mg, *queues)
+
+
+def _exchange_queue(q, l_local: float, m: int, boundary: str,
+                    is_first: Array, is_last: Array):
+    """Pack one queue's boundary crossers (vmapped over the species axis).
+
+    Returns (kept, pack_l, pack_r, leaver_x, leaver_w, diag):
+    ``pack_l``/``pack_r`` are the fixed-size send buffers (in the receiver's
+    frame); ``leaver_x``/``leaver_w`` cover every particle that left —
+    sent or wall-absorbed — at its raw post-push position, for the carried-rho
+    subtraction. Crossers that exceed the pack or the per-direction budget
+    stay local (clamped, retried next step) instead of being lost.
+    """
+
+    def pack_one(x, v, w, alive):
+        buf = SpeciesBuffer(x=x, v=v, w=w, alive=alive)
+        cap = buf.capacity
+        go_l = alive & (x < 0.0)
+        go_r = alive & (x >= l_local)
+        leave = go_l | go_r
+        # ONE full-capacity packing scan for both directions (a particle
+        # crosses at most one boundary); per-direction work is on 2m only
+        idx = jnp.nonzero(leave, size=2 * m, fill_value=cap)[0]
+        packed = take(buf, idx)
+        went_l = packed.alive & (packed.x < 0.0)
+        went_r = packed.alive & (packed.x >= l_local)
+        ok_l = went_l & (jnp.cumsum(went_l.astype(jnp.int32)) - 1 < m)
+        ok_r = went_r & (jnp.cumsum(went_r.astype(jnp.int32)) - 1 < m)
+        ok = ok_l | ok_r                 # packed AND inside the send budget
+        # scatter the verdict back to slot space: only winners leave
+        gone = jnp.zeros((cap,), bool).at[idx].set(ok, mode="drop")
+        kept = kill(buf, gone)
+        # overflow fix: losers stay alive, clamped just inside the slab so
+        # the next field gather is in-bounds; they re-cross next step
+        stay = leave & ~gone
+        x_in = jnp.clip(x, 0.0, jnp.nextafter(
+            jnp.asarray(l_local, x.dtype), jnp.asarray(0.0, x.dtype)))
+        kept = dataclasses.replace(kept, x=jnp.where(stay, x_in, kept.x))
+
+        if boundary == "absorb":         # global walls absorb at edge domains
+            absorb = (ok_l & is_first) | (ok_r & is_last)
+        else:                            # global periodic: the ring wraps
+            absorb = jnp.zeros_like(ok)
+        send_l = ok_l & ~absorb
+        send_r = ok_r & ~absorb
+        idx_l = jnp.nonzero(send_l, size=m, fill_value=2 * m)[0]
+        idx_r = jnp.nonzero(send_r, size=m, fill_value=2 * m)[0]
+        pack_l = take(packed, idx_l)
+        pack_r = take(packed, idx_r)
+        # shift into the receiver's local frame
+        pack_l = dataclasses.replace(pack_l, x=pack_l.x + l_local)
+        pack_r = dataclasses.replace(pack_r, x=pack_r.x - l_local)
+        diag = {
+            "migrated_left": jnp.sum(send_l.astype(jnp.int32)),
+            "migrated_right": jnp.sum(send_r.astype(jnp.int32)),
+            "migration_overflow": jnp.sum(stay.astype(jnp.int32)),
+            "wall_absorbed": jnp.sum(absorb.astype(jnp.int32)),
+        }
+        return kept, pack_l, pack_r, packed.x, packed.w * ok, diag
+
+    return jax.vmap(pack_one)(q.x, q.v, q.w, q.alive)
+
+
+def _inject_rows(full: SpeciesBuffer, cand: SpeciesBuffer):
+    """vmapped inject of (S, ncand) candidates into (S, cap) buffers."""
+
+    def one(bx, bv, bw, ba, cx, cv, cw, ca):
+        return inject_masked(SpeciesBuffer(x=bx, v=bv, w=bw, alive=ba),
+                             cx, cv, cw, ca)
+
+    return jax.vmap(one)(full.x, full.v, full.w, full.alive,
+                         cand.x, cand.v, cand.w, cand.alive)
+
+
+def _state_specs(ecfg: EngineConfig, carried: bool) -> PICState:
+    part = P(ecfg.axis_names)
+    return PICState(
+        species=tuple(
+            SpeciesBuffer(x=part, v=part, w=part, alive=part)
+            for _ in ecfg.pic.species),
+        key=part, step=P(), rho=part if carried else None)
+
+
+def _lift(species, key, step, rho) -> PICState:
+    """Re-attach the leading sharded (1, ...) device axis."""
+    return PICState(
+        species=tuple(jax.tree.map(lambda a: a[None], b) for b in species),
+        key=key[None], step=step, rho=rho)
+
+
+def make_engine_step(ecfg: EngineConfig, mesh: Mesh, *, upto: str = "full",
+                     donate: bool = True):
+    """Build the shard_map'd async(n) PIC step.
+
+    ``upto='full'`` (default) returns the production step: jit-compiled,
+    state-donating, ``state -> (state, diag)``. Earlier values of ``upto``
+    build the perf probes (see ``PHASES``): the pipeline runs through that
+    phase and returns ``(state, aux)`` undonated, so cumulative differencing
+    yields per-phase times without instrumenting the hot path.
+    """
+    if upto not in PHASES:
+        raise ValueError(f"upto must be one of {PHASES}, got {upto!r}")
+    cfg = ecfg.pic
+    ncl = ecfg.local_nc(mesh)
+    grid_local = Grid1D(nc=ncl, dx=cfg.dx)
+    l_local = ncl * cfg.dx
+    d = ecfg.num_domains(mesh)
+    n_q = ecfg.async_n
+    m_q = ecfg.queue_migration
+    carried = _carries_rho(ecfg)
+    groups = _capacity_groups(ecfg, mesh)
+    for i, sc in enumerate(cfg.species):
+        cap_l = ecfg.local_cap(sc, mesh)
+        if cap_l % n_q != 0:
+            raise ValueError(
+                f"async_n ({n_q}) must divide the local capacity ({cap_l}) "
+                f"of species {sc.name!r}")
+    axis_names = ecfg.axis_names
+
+    def local_step(state: PICState):
+        species = [jax.tree.map(lambda a: a[0], b) for b in state.species]
+        key = state.key[0]
+        r = halo.rank(axis_names)
+        is_first = r == 0
+        is_last = r == d - 1
+
+        def group_meta(idxs):
+            scs = [cfg.species[i] for i in idxs]
+            dtype = species[idxs[0]].x.dtype
+            qm = jnp.asarray([sc.charge / sc.mass for sc in scs], dtype)
+            dts = jnp.asarray([cfg.dt * sc.stride for sc in scs], dtype)
+            charges = jnp.asarray([sc.charge for sc in scs], dtype)
+            return scs, qm, dts, charges
+
+        # ---- field phase: halo exchange, never a full-rho all_gather ----
+        if not cfg.field_solve:
+            e = jnp.zeros((ncl + 1,), jnp.float32)
+        else:
+            if carried and state.rho is not None:
+                rho_local = state.rho[0]
+            else:
+                rho_local = jnp.zeros((ncl + 1,), jnp.float32)
+                for idxs in groups:
+                    _, _, _, charges = group_meta(idxs)
+                    st = stack_species([species[i] for i in idxs])
+                    rho_local = rho_local + deposit_stacked(
+                        grid_local, st.x, st.w, st.alive, charges)
+            e = halo.field_phase(
+                rho_local, dx=cfg.dx, eps0=cfg.eps0,
+                smoothing_passes=cfg.smoothing_passes, axis_names=axis_names,
+                mesh=mesh, is_first=is_first, is_last=is_last)
+        if upto == "field":
+            return _lift(species, key, state.step + 1, state.rho), e[None]
+
+        diag: dict = {}
+
+        def dacc(name, k, v):
+            key_ = f"{name}/{k}"
+            diag[key_] = diag.get(key_, 0) + v
+
+        rho_acc = jnp.zeros((ncl + 1,), jnp.float32) if carried else None
+
+        # ---- async(n) pipeline: push queue k, issue its migration
+        #      collective, then push queue k+1 while k's permute flies ----
+        staged = []
+        for idxs in groups:
+            scs, qm, dts, charges = group_meta(idxs)
+            strides = [sc.stride for sc in scs]
+            st = stack_species([species[i] for i in idxs])
+            kept_qs, pending = [], []
+            for q in _split_queues(st, n_q):
+                out, hl, hr, pdiag, rho_q = mover.push_stacked(
+                    q, e, grid_local, qm, dts, b=cfg.b_field,
+                    boundary="open", gather_mode=cfg.gather_mode,
+                    charges=charges if carried else None)
+                if any(s > 1 for s in strides):
+                    # sub-cycling: heavy species push every `stride` steps
+                    do = jnp.mod(state.step, jnp.asarray(strides)) == 0
+                    sel = lambda new, old: jnp.where(
+                        do.reshape((-1,) + (1,) * (new.ndim - 1)), new, old)
+                    out = jax.tree.map(sel, out, q)
+                    pdiag = {k: jnp.where(do, v, jnp.zeros_like(v))
+                             for k, v in pdiag.items()}
+                for j, sc in enumerate(scs):
+                    for k, v in pdiag.items():
+                        dacc(sc.name, k, v[j])
+                if upto == "push":
+                    if carried:
+                        rho_acc = rho_acc + rho_q   # keep the in-pass deposit
+                    kept_qs.append(out)             # live in the probe output
+                    continue
+                kept, pack_l, pack_r, lv_x, lv_w, dmig = _exchange_queue(
+                    out, l_local, m_q, cfg.boundary, is_first, is_last)
+                if carried:
+                    # leavers were deposited at their raw (edge-clipped)
+                    # positions by the in-pass deposit; take them back out
+                    rho_acc = rho_acc + rho_q - deposit_windowed(
+                        grid_local, lv_x, charges[:, None] * lv_w)
+                recv_r = halo.ppermute_tree(pack_l, axis_names, -1, mesh)
+                recv_l = halo.ppermute_tree(pack_r, axis_names, +1, mesh)
+                kept_qs.append(StackedSpecies(
+                    x=kept.x, v=kept.v, w=kept.w, alive=kept.alive))
+                pending.append((recv_l, recv_r))
+                for j, sc in enumerate(scs):
+                    for k, v in dmig.items():
+                        dacc(sc.name, k, v[j])
+            staged.append((idxs, charges, kept_qs, pending))
+
+        if upto in ("push", "migrate"):
+            out_species = list(species)
+            aux = e
+            for idxs, _, kept_qs, pending in staged:
+                full = _merge_queues(kept_qs, n_q)
+                for j, i in enumerate(idxs):
+                    out_species[i] = SpeciesBuffer(
+                        x=full.x[j], v=full.v[j], w=full.w[j],
+                        alive=full.alive[j])
+                # keep the received packs live in the probe output so the
+                # migration collectives are not dead-code-eliminated
+                for recv in pending:
+                    for leaf in jax.tree.leaves(recv):
+                        aux = aux + jnp.sum(leaf.astype(jnp.float32))
+            rho_out = rho_acc[None] if carried else state.rho
+            return _lift(out_species, key, state.step + 1, rho_out), aux[None]
+
+        # ---- deferred merge: every queue's collective has been issued;
+        #      inject all arrivals in one free-slot scan per species ----
+        for idxs, charges, kept_qs, pending in staged:
+            scs = [cfg.species[i] for i in idxs]
+            full = _merge_queues(kept_qs, n_q)
+            packs = [p for pair in pending for p in pair]
+            cand = jax.tree.map(
+                lambda *xs: jnp.concatenate(xs, axis=1), *packs)
+            merged, dropped, accepted = _inject_rows(full, cand)
+            if carried:
+                rho_acc = rho_acc + deposit_windowed(
+                    grid_local, cand.x, charges[:, None] * cand.w * accepted)
+            for j, (i, sc) in enumerate(zip(idxs, scs)):
+                species[i] = SpeciesBuffer(
+                    x=merged.x[j], v=merged.v[j], w=merged.w[j],
+                    alive=merged.alive[j])
+                dacc(sc.name, "merge_dropped", dropped[j])
+        rho_out = rho_acc[None] if carried else state.rho
+        if upto == "merge":
+            return _lift(species, key, state.step + 1, rho_out), e[None]
+
+        # ---- MC collisions (the paper's §3.3 scenario) ----
+        if cfg.ionization is not None:
+            ni, ei, ii = cfg.ionization
+            key, sub = jax.random.split(key)
+            sub = jax.random.fold_in(sub, r)
+            params = collisions.IonizationParams(
+                rate=cfg.ionization_rate, vth_electron=cfg.ionization_vth_e)
+            neu, ele, ion, dion = collisions.ionize(
+                sub, species[ni], species[ei], species[ii], grid_local,
+                params, cfg.dt)
+            species[ni], species[ei], species[ii] = neu, ele, ion
+            diag.update(dion)
+
+        # ---- global diagnostics (psum over domains) ----
+        for sc, buf in zip(cfg.species, species):
+            diag[f"{sc.name}/count"] = buf.count()
+            diag[f"{sc.name}/ke"] = diagnostics.kinetic_energy(buf, sc.mass)
+            diag[f"{sc.name}/charge"] = diagnostics.total_charge(
+                buf, sc.charge)
+        diag = {k: jax.lax.psum(v, axis_names) for k, v in diag.items()}
+
+        return _lift(species, key, state.step + 1, rho_out), diag
+
+    specs_state = _state_specs(ecfg, carried)
+    out_specs = ((specs_state, P()) if upto == "full"
+                 else (specs_state, P(axis_names)))
+    step = halo.shard_map(
+        local_step, mesh=mesh, in_specs=(specs_state,), out_specs=out_specs,
+        check_vma=False)
+    donate_kw = {"donate_argnums": (0,)} if (donate and upto == "full") else {}
+    return jax.jit(step, **donate_kw)
+
+
+def init_engine_state(ecfg: EngineConfig, mesh: Mesh,
+                      seed: int = 0) -> PICState:
+    """Per-domain local init, sharded over the mesh domain axes."""
+    cfg = ecfg.pic
+    ncl = ecfg.local_nc(mesh)
+    grid_local = Grid1D(nc=ncl, dx=cfg.dx)
+    l_local = ncl * cfg.dx
+    d = ecfg.num_domains(mesh)
+    carried = _carries_rho(ecfg)
+    groups = _capacity_groups(ecfg, mesh)
+
+    def local_init() -> PICState:
+        r = halo.rank(ecfg.axis_names)
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), r)
+        keys = jax.random.split(key, len(cfg.species) + 1)
+        bufs = []
+        for i, sc in enumerate(cfg.species):
+            cap_l = ecfg.local_cap(sc, mesh)
+            n_l = sc.n_init // d
+            b = init_uniform(keys[i], cap_l, n_l, l_local, sc.vth, sc.drift,
+                             sc.weight)
+            bufs.append(b)
+        rho = None
+        if carried:
+            rho = jnp.zeros((ncl + 1,), jnp.float32)
+            for idxs in groups:
+                charges = jnp.asarray(
+                    [cfg.species[i].charge for i in idxs], bufs[0].x.dtype)
+                st = stack_species([bufs[i] for i in idxs])
+                rho = rho + deposit_stacked(
+                    grid_local, st.x, st.w, st.alive, charges)
+        return _lift(bufs, keys[-1], jnp.zeros((), jnp.int32),
+                     rho[None] if carried else None)
+
+    specs_state = _state_specs(ecfg, carried)
+    init = halo.shard_map(local_init, mesh=mesh, in_specs=(),
+                          out_specs=specs_state, check_vma=False)
+    return jax.jit(init)()

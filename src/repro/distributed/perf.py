@@ -1,0 +1,99 @@
+"""Speedup / parallel-efficiency instrumentation for the distributed engine.
+
+The paper reports per-phase Nsight timings (mover, migration, merge, field)
+and strong-scaling speedup S_D = T_1 / T_D with parallel efficiency
+PE = T_1 / (D * T_D) up to 400 GPUs (Tables 2-4, 8.77x / 54.81% at 400).
+This module produces the same quantities for the JAX engine:
+
+* ``phase_breakdown`` — wall-times per cycle phase, measured by building the
+  step at each cumulative phase checkpoint (``engine.PHASES``) and
+  differencing: T(push) - T(field) is the push phase, and so on. The hot
+  production step itself carries no timers; a checkpointed probe is
+  recompiled per phase instead (the jit analogue of bracketing Nsight
+  ranges around loop sections).
+* ``scaling_metrics`` — attaches speedup and PE to a {domain_count: phases}
+  table, referenced to the smallest domain count present.
+* ``write_scaling_json`` — the machine-readable ``BENCH_scaling.json``
+  artifact that successive PRs accumulate (same contract as
+  ``BENCH_mover.json``).
+
+All times are microseconds of median wall-clock per step, blocking on device
+results — on emulated host devices this measures harness overhead rather
+than hardware scaling; the JSON records the environment so the numbers are
+never mistaken for the paper's.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+import jax
+
+from repro.distributed import engine as engine_mod
+
+# per-phase labels derived from consecutive engine.PHASES checkpoints
+PHASE_LABELS = ("field", "push", "migrate", "merge", "collide_diag")
+
+
+def _time_fn(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall-time per call in microseconds (blocks on results)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def phase_breakdown(ecfg, mesh, *, iters: int = 3, warmup: int = 1,
+                    seed: int = 0, state=None) -> dict[str, float]:
+    """Per-phase step times (µs): field / push / migrate / merge /
+    collide_diag, plus the end-to-end ``total``.
+
+    Probes are undonated and re-fed the same state, so the breakdown can run
+    on a live state without invalidating it.
+    """
+    if state is None:
+        state = engine_mod.init_engine_state(ecfg, mesh, seed)
+    cum = {}
+    for upto in engine_mod.PHASES:
+        fn = engine_mod.make_engine_step(ecfg, mesh, upto=upto, donate=False)
+        cum[upto] = _time_fn(fn, state, warmup=warmup, iters=iters)
+    phases = {"field": cum["field"]}
+    for prev, cur, label in zip(engine_mod.PHASES, engine_mod.PHASES[1:],
+                                PHASE_LABELS[1:]):
+        phases[label] = max(cum[cur] - cum[prev], 0.0)
+    phases["total"] = cum["full"]
+    return phases
+
+
+def scaling_metrics(per_domain: dict[int, dict[str, float]]) -> dict:
+    """Attach speedup and PE = T_ref / (D * T_D) to a phase-time table.
+
+    ``per_domain`` maps domain count -> phase dict (must contain 'total');
+    the reference T_1 is the smallest domain count present (normally 1).
+    """
+    ref_d = min(per_domain)
+    t_ref = per_domain[ref_d]["total"] * ref_d
+    out = {}
+    for dcount in sorted(per_domain):
+        t_d = per_domain[dcount]["total"]
+        out[dcount] = {
+            "phases": dict(per_domain[dcount]),
+            "speedup": t_ref / t_d if t_d else float("nan"),
+            "parallel_efficiency": (t_ref / (dcount * t_d) if t_d
+                                    else float("nan")),
+        }
+    return out
+
+
+def write_scaling_json(path: str, payload: dict) -> None:
+    with open(path, "w") as fh:
+        json.dump(payload, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+    print(f"# wrote {path}", file=sys.stderr)

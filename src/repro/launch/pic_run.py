@@ -1,24 +1,23 @@
 """PIC launcher: run the paper's scenario, single- or multi-domain.
 
     PYTHONPATH=src python -m repro.launch.pic_run --steps 100 \
-        [--domains 4] [--strategy unified|explicit|async_batched|fused] \
-        [--diag-every K]
+        [--domains 4] [--async-n 2] \
+        [--strategy unified|explicit|async_batched|fused] \
+        [--field-solve] [--diag-every K] [--phases]
 
---domains > 1 requires that many jax devices (tests use subprocesses with
-xla_force_host_platform_device_count; a TPU slice provides them natively).
+--domains > 1 runs the asynchronous multi-device engine
+(``repro.distributed``): the domain's particles are split into --async-n
+queues whose migration collectives overlap the next queue's push. If the
+process exposes fewer jax devices than --domains, emulated host devices are
+requested via XLA_FLAGS before jax initializes (a TPU slice provides real
+ones natively). --phases prints the per-phase timing breakdown.
 """
 
 from __future__ import annotations
 
 import argparse
+import os
 import time
-
-import jax
-import numpy as np
-
-from repro.configs.pic_bit1 import make_bench_config
-from repro.core import decomposition, pic
-from repro.launch.mesh import make_debug_mesh
 
 
 def main() -> None:
@@ -27,18 +26,47 @@ def main() -> None:
     ap.add_argument("--nc", type=int, default=4096)
     ap.add_argument("--particles", type=int, default=131_072)
     ap.add_argument("--domains", type=int, default=1)
+    ap.add_argument("--async-n", type=int, default=1,
+                    help="migration/compute queues per domain (paper's "
+                         "async(n))")
     ap.add_argument("--strategy", default="unified",
                     choices=["unified", "explicit", "async_batched",
                              "fused"])
+    ap.add_argument("--field-solve", action="store_true",
+                    help="enable the halo-exchange field phase (the paper's "
+                         "benchmark scenario disables it)")
     ap.add_argument("--diag-every", type=int, default=1,
-                    help="compute full diagnostics every K-th step")
+                    help="compute full diagnostics every K-th step "
+                         "(single-domain only)")
+    ap.add_argument("--phases", action="store_true",
+                    help="print the per-phase timing breakdown (multi-domain)")
     args = ap.parse_args()
+
+    if args.domains > 1:
+        # must happen before jax initializes; a no-op when XLA_FLAGS is
+        # already set (e.g. a real TPU slice or an outer test harness)
+        os.environ.setdefault(
+            "XLA_FLAGS",
+            f"--xla_force_host_platform_device_count={args.domains}")
+
+    import dataclasses
+
+    import jax
+    import numpy as np
+
+    from repro.configs.pic_bit1 import make_bench_config
+    from repro.core import pic
+    from repro.distributed import engine, perf
+    from repro.launch.mesh import make_debug_mesh
 
     cfg = make_bench_config(nc=args.nc, n=args.particles,
                             strategy=args.strategy,
                             diag_every=args.diag_every)
+    if args.field_solve:
+        cfg = dataclasses.replace(cfg, field_solve=True)
     t0 = time.perf_counter()
-    if args.domains == 1:
+    mesh = ecfg = None
+    if args.domains == 1 and args.async_n == 1:
         state = pic.init_state(cfg, 0)
         final, diags = jax.block_until_ready(
             jax.jit(lambda s: pic.run(cfg, args.steps, state=s))(state))
@@ -48,10 +76,10 @@ def main() -> None:
                   for sc, buf in zip(cfg.species, final.species)}
     else:
         mesh = make_debug_mesh(data=args.domains, model=1)
-        dcfg = decomposition.DomainConfig(pic=cfg, axis_names=("data",),
-                                          max_migration=8192)
-        state = decomposition.init_distributed_state(dcfg, mesh, 0)
-        step = decomposition.make_distributed_step(dcfg, mesh)
+        ecfg = engine.EngineConfig(pic=cfg, axis_names=("data",),
+                                   max_migration=8192, async_n=args.async_n)
+        state = engine.init_engine_state(ecfg, mesh, 0)
+        step = engine.make_engine_step(ecfg, mesh)
         for _ in range(args.steps):
             state, diag = step(state)
         jax.block_until_ready(state.species[0].x)
@@ -59,9 +87,19 @@ def main() -> None:
                   if k.endswith("/count")}
     wall = time.perf_counter() - t0
     print(f"{args.steps} steps, {args.domains} domain(s), "
-          f"strategy={args.strategy}: {wall:.2f}s "
+          f"async_n={args.async_n}, strategy={args.strategy}: {wall:.2f}s "
           f"({wall / args.steps * 1e3:.1f} ms/step)")
     print("final populations:", counts)
+
+    if args.phases:
+        if mesh is None:
+            print("--phases times the engine pipeline; pass --domains or "
+                  "--async-n > 1 (the single-domain run above used the "
+                  "plain hot loop)")
+        else:
+            phases = perf.phase_breakdown(ecfg, mesh, iters=3, warmup=1)
+            print("per-phase (us/step):",
+                  {k: round(v, 1) for k, v in phases.items()})
 
 
 if __name__ == "__main__":

@@ -1,6 +1,9 @@
-"""Distributed PIC: migration correctness vs a single-domain reference run,
-executed in a subprocess with 4 fake devices (the dry-run flag must not leak
-into this process's jax)."""
+"""Distributed PIC through the ``core.decomposition`` back-compat shim
+(now a thin layer over ``repro.distributed.engine`` with async_n=1):
+migration correctness vs a single-domain reference run, executed in a
+subprocess with 4 fake devices (the dry-run flag must not leak into this
+process's jax). Engine-level coverage (async_n > 1, halo field, overflow
+retention) lives in ``test_async_engine.py``."""
 
 import os
 import subprocess
