@@ -4,10 +4,13 @@ The paper scales BIT1's optimized mover to 400 GPUs and reports per-phase
 Nsight times, speedup and parallel efficiency PE = T1/(D*TD). Here the
 asynchronous multi-device engine (``repro.distributed``) runs on D emulated
 host devices in subprocesses, and ``perf.phase_breakdown`` produces the
-per-phase table per domain count; speedup/PE land in the machine-readable
-``BENCH_scaling.json`` (the container exposes two physical cores, so this
-measures harness overhead/correctness, not parallel speedup — the JSON
-records the environment so the numbers are never mistaken for the paper's).
+per-phase table per domain count (see ``docs/benchmarks.md`` for the JSON
+schema); per-queue occupancy and skew from ``perf.queue_stats`` record the
+load-balance state the ``rebalance_every`` knob bounds. Speedup/PE land in
+the machine-readable ``BENCH_scaling.json`` (the container exposes two
+physical cores, so this measures harness overhead/correctness, not parallel
+speedup — the JSON records the environment so the numbers are never
+mistaken for the paper's).
 """
 
 from __future__ import annotations
@@ -21,7 +24,7 @@ SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 _PROG = """
 import json
-from repro.configs.pic_bit1 import make_bench_config
+from repro.configs.pic_bit1 import make_bench_config, make_engine_config
 from repro.distributed import engine, perf
 from repro.launch.mesh import make_debug_mesh
 import dataclasses
@@ -30,19 +33,22 @@ p = json.loads(%r)
 mesh = make_debug_mesh(data=p["d"], model=1)
 cfg = make_bench_config(nc=p["nc"], n=p["n"], strategy="fused")
 # enable the halo field phase so the 'field' row measures the distributed
-# solve (the paper's own benchmark disables it; conservation is unaffected)
+# solve, and drop ionization so the persistent free-slot ring is active
+# (the legacy full-scan merge is the ionization path)
 cfg = dataclasses.replace(cfg, field_solve=True, ionization=None)
-ecfg = engine.EngineConfig(pic=cfg, axis_names=("data",),
-                           max_migration=p["m"], async_n=p["async_n"])
+ecfg = make_engine_config(cfg, max_migration=p["m"], async_n=p["async_n"],
+                          rebalance_every=p["rebalance_every"])
 phases = perf.phase_breakdown(ecfg, mesh, iters=p["iters"], warmup=1)
-print("RESULTJSON " + json.dumps(phases))
+queues = perf.queue_stats(ecfg, mesh, steps=3)
+print("RESULTJSON " + json.dumps({"phases": phases, "queues": queues}))
 """
 
 
 def _measure(d: int, *, nc: int, n: int, async_n: int, iters: int,
-             max_migration: int) -> dict | None:
+             max_migration: int, rebalance_every: int) -> dict | None:
     params = json.dumps(dict(d=d, nc=nc, n=n, async_n=async_n, iters=iters,
-                             m=max_migration))
+                             m=max_migration,
+                             rebalance_every=rebalance_every))
     env = dict(os.environ)
     env["PYTHONPATH"] = SRC
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={d}"
@@ -57,47 +63,52 @@ def _measure(d: int, *, nc: int, n: int, async_n: int, iters: int,
 
 def run(domains=(1, 2, 4, 8), *, nc: int = 4096, n: int = 131_072,
         async_n: int = 2, iters: int = 5, max_migration: int = 8192,
-        json_path: str = "BENCH_scaling.json",
+        rebalance_every: int = 0, json_path: str = "BENCH_scaling.json",
         mode: str = "full") -> list[str]:
     from repro.distributed import perf
 
-    per_domain = {}
+    per_domain, per_domain_queues = {}, {}
     for d in domains:
-        phases = _measure(d, nc=nc, n=n, async_n=async_n, iters=iters,
-                          max_migration=max_migration)
-        if phases is not None:
-            per_domain[d] = phases
+        res = _measure(d, nc=nc, n=n, async_n=async_n, iters=iters,
+                       max_migration=max_migration,
+                       rebalance_every=rebalance_every)
+        if res is not None:
+            per_domain[d] = res["phases"]
+            per_domain_queues[d] = res["queues"]
     if not per_domain:
         # every subprocess died: surface it instead of exiting 0 with no JSON
         raise RuntimeError(
             f"engine scaling bench produced no results for domains={domains}"
             f" (see stderr above for per-domain failures)")
     rows = []
-    if per_domain:
-        metrics = perf.scaling_metrics(per_domain)
-        payload = {
-            "mode": mode,
-            "async_n": async_n,
-            "config": {"nc": nc, "n_per_species": n, "iters": iters,
-                       "max_migration": max_migration},
-            "environment": "emulated host devices, 2-core CPU container "
-                           "(harness overhead, not hardware scaling)",
-            "domains": {str(d): metrics[d] for d in metrics},
-        }
-        perf.write_scaling_json(json_path, payload)
-        for d in sorted(metrics):
-            m = metrics[d]
-            rows.append(
-                f"engine_step/domains={d};async_n={async_n},"
-                f"{m['phases']['total']:.1f},"
-                f"speedup={m['speedup']:.2f};pe="
-                f"{m['parallel_efficiency']:.2f}")
+    metrics = perf.scaling_metrics(per_domain)
+    payload = {
+        "mode": mode,
+        "async_n": async_n,
+        "rebalance_every": rebalance_every,
+        "config": {"nc": nc, "n_per_species": n, "iters": iters,
+                   "max_migration": max_migration},
+        "environment": "emulated host devices, 2-core CPU container "
+                       "(harness overhead, not hardware scaling)",
+        "domains": {
+            str(d): {**metrics[d], "queues": per_domain_queues[d]}
+            for d in metrics},
+    }
+    perf.write_scaling_json(json_path, payload)
+    for d in sorted(metrics):
+        m = metrics[d]
+        rows.append(
+            f"engine_step/domains={d};async_n={async_n},"
+            f"{m['phases']['total']:.1f},"
+            f"speedup={m['speedup']:.2f};pe="
+            f"{m['parallel_efficiency']:.2f}")
     return rows
 
 
 def smoke(json_path: str = "BENCH_scaling.json") -> list[str]:
-    """CI-sized scaling sweep: small grid, D in {1, 2, 4}, 2 iters."""
-    return run((1, 2, 4), nc=512, n=16_384, async_n=2, iters=2,
+    """CI-sized scaling sweep at the acceptance point: small grid,
+    D in {1, 2, 4}, async_n=4, 2 iters."""
+    return run((1, 2, 4), nc=512, n=16_384, async_n=4, iters=2,
                max_migration=2048, json_path=json_path, mode="smoke")
 
 

@@ -22,6 +22,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--domains", type=int, default=4)
     ap.add_argument("--async-n", type=int, default=2)
+    ap.add_argument("--rebalance-every", type=int, default=0,
+                    help="compact + re-split queues every K steps (0 = off)")
     ap.add_argument("--steps", type=int, default=40)
     ap.add_argument("--nc", type=int, default=512)
     ap.add_argument("--n", type=int, default=16_384)
@@ -37,17 +39,18 @@ def main() -> None:
     import jax
     import numpy as np
 
-    from repro.configs.pic_bit1 import make_bench_config
+    from repro.configs.pic_bit1 import make_bench_config, make_engine_config
     from repro.distributed import engine, perf
     from repro.launch.mesh import make_debug_mesh
 
     mesh = make_debug_mesh(data=args.domains, model=1)
     cfg = make_bench_config(nc=args.nc, n=args.n, strategy="fused")
     # enable the halo field phase (the paper's own test disables it) and run
-    # pure transport so conservation is exact and easy to assert
+    # pure transport so conservation is exact and easy to assert (the ring
+    # merge is active: no ionization)
     cfg = dataclasses.replace(cfg, field_solve=True, ionization=None)
-    ecfg = engine.EngineConfig(pic=cfg, axis_names=("data",),
-                               async_n=args.async_n, max_migration=2048)
+    ecfg = make_engine_config(cfg, async_n=args.async_n, max_migration=2048,
+                              rebalance_every=args.rebalance_every)
 
     state = engine.init_engine_state(ecfg, mesh, seed=0)
     step = engine.make_engine_step(ecfg, mesh)
@@ -71,7 +74,9 @@ def main() -> None:
     for sc in cfg.species:
         cnt = int(np.asarray(diag[f"{sc.name}/count"]))
         print(f"  {sc.name}: {cnt} particles (init {n0[sc.name]}), "
-              f"charge {float(np.asarray(diag[f'{sc.name}/charge'])):+.2f}")
+              f"charge {float(np.asarray(diag[f'{sc.name}/charge'])):+.2f}, "
+              f"queue occupancy {np.asarray(diag[f'{sc.name}/queue_occ'])} "
+              f"(skew {int(np.asarray(diag[f'{sc.name}/queue_skew']))})")
         ok &= cnt == n0[sc.name]
     assert ok, "conservation FAILED"
     print("conservation PASSED")

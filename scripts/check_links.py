@@ -1,0 +1,68 @@
+#!/usr/bin/env python
+"""Fail on broken RELATIVE markdown links in the given files/directories.
+
+    python scripts/check_links.py README.md docs
+
+Checks every ``[text](target)`` whose target is not an absolute URL or
+anchor: the target (resolved against the containing file, ``#fragment``
+stripped) must exist. External http(s)/mailto links are skipped — CI must
+not depend on the network.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")   # links AND images
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def md_files(paths: list[str]) -> list[str]:
+    out = []
+    for p in paths:
+        if os.path.isdir(p):
+            for root, _, files in os.walk(p):
+                out.extend(os.path.join(root, f) for f in files
+                           if f.endswith(".md"))
+        else:
+            out.append(p)
+    return sorted(set(out))
+
+
+def check(paths: list[str]) -> list[str]:
+    errors = []
+    for path in md_files(paths):
+        with open(path, encoding="utf-8") as fh:
+            text = fh.read()
+        base = os.path.dirname(os.path.abspath(path))
+        for lineno, line in enumerate(text.splitlines(), 1):
+            for m in LINK_RE.finditer(line):
+                target = m.group(1)
+                if target.startswith(SKIP_PREFIXES):
+                    continue
+                rel = target.split("#", 1)[0]
+                if not rel:
+                    continue
+                if not os.path.exists(os.path.join(base, rel)):
+                    errors.append(f"{path}:{lineno}: broken link -> {target}")
+    return errors
+
+
+def main() -> int:
+    paths = sys.argv[1:] or ["README.md", "docs"]
+    errors = check(paths)
+    for e in errors:
+        print(e, file=sys.stderr)
+    n = len(md_files(paths))
+    if errors:
+        print(f"# link check FAILED: {len(errors)} broken link(s) "
+              f"across {n} file(s)", file=sys.stderr)
+        return 1
+    print(f"# link check OK: {n} markdown file(s)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

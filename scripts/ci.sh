@@ -1,5 +1,6 @@
 #!/usr/bin/env bash
-# CI entry point: tier-1 tests + multi-device lane + smoke perf benchmarks.
+# CI entry point: tier-1 tests + multi-device lane + smoke perf benchmarks
+# + docs lane.
 #
 # Lane 1: the full tier-1 suite on the default single device (multi-device
 #         tests spawn their own emulated-device subprocesses).
@@ -10,6 +11,9 @@
 #         engine scaling sweep with per-phase times + speedup/PE
 #         (BENCH_scaling.json). Full-size results that gate perf PRs live in
 #         BENCH_mover.json / BENCH_scaling.json (python -m benchmarks.run).
+# Lane 4: docs — no broken relative links in README.md / docs/, and the
+#         README quickstart commands actually run (keep these in sync with
+#         the "Quickstart" section of README.md).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -17,5 +21,11 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 python -m pytest -x -q
 XLA_FLAGS="--xla_force_host_platform_device_count=4" \
-    python -m pytest -x -q tests/test_async_engine.py
+    python -m pytest -x -q tests/test_async_engine.py tests/test_slot_ring.py
 python -m benchmarks.run --smoke --json BENCH_smoke.json
+
+# ---- docs lane ----
+python scripts/check_links.py README.md docs
+python -m repro.launch.pic_run --steps 2 --nc 256 --particles 4096
+python -m repro.launch.pic_run --steps 2 --nc 256 --particles 4096 \
+    --domains 2 --async-n 2 --rebalance-every 2 --field-solve

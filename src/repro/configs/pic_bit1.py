@@ -68,3 +68,26 @@ def make_bench_config(nc: int = 4096, n: int = 262_144,
         ionization=(2, 0, 1), ionization_rate=1e-4, ionization_vth_e=1.0,
         diag_every=diag_every,
     )
+
+
+def make_engine_config(pic_cfg: pic.PICConfig | None = None, *,
+                       async_n: int = 1, max_migration: int = 8192,
+                       rebalance_every: int = 0,
+                       axis_names: tuple[str, ...] = ("data",),
+                       **bench_kw):
+    """EngineConfig for the asynchronous multi-device engine, centralizing
+    the queue-schedule knobs the launcher and benchmarks share.
+
+    ``async_n`` is the paper's async(n) queue count, ``max_migration`` the
+    per-species/direction/step send budget, ``rebalance_every`` the
+    queue-adaptive re-split period (0 = off). With no ``pic_cfg`` the
+    CPU-scale bench config is built from ``bench_kw``
+    (see ``make_bench_config``).
+    """
+    from repro.distributed import engine  # deferred: keep configs light
+
+    if pic_cfg is None:
+        pic_cfg = make_bench_config(**bench_kw)
+    return engine.EngineConfig(
+        pic=pic_cfg, axis_names=axis_names, async_n=async_n,
+        max_migration=max_migration, rebalance_every=rebalance_every)

@@ -180,6 +180,27 @@ def free_slots(buf: SpeciesBuffer, max_n: int) -> Array:
     return jnp.nonzero(~buf.alive, size=max_n, fill_value=buf.capacity)[0]
 
 
+def inject_at(buf: SpeciesBuffer, dest: Array, x: Array, v: Array, w: Array,
+              ok: Array) -> SpeciesBuffer:
+    """Scatter candidates into pre-claimed dead slots (the gather-free half
+    of injection).
+
+    ``dest`` (M,) are slot indices already known to be dead — from
+    ``free_slots`` or from a ``FreeSlotRing`` claim; ``ok`` masks the
+    candidates that actually own a slot. Rejected candidates scatter to the
+    ``capacity`` sentinel and drop. Both the full-scan ``inject_masked`` and
+    the distributed engine's ring merge funnel through here, so the scatter
+    semantics can never diverge.
+    """
+    dest = jnp.where(ok, dest, buf.capacity)
+    return SpeciesBuffer(
+        x=buf.x.at[dest].set(x, mode="drop"),
+        v=buf.v.at[dest].set(v, mode="drop"),
+        w=buf.w.at[dest].set(w, mode="drop"),
+        alive=buf.alive.at[dest].set(True, mode="drop"),
+    )
+
+
 def inject_masked(buf: SpeciesBuffer, x: Array, v: Array, w: Array,
                   mask: Array) -> tuple[SpeciesBuffer, Array, Array]:
     """Write ``mask``-selected new particles into dead slots.
@@ -190,6 +211,10 @@ def inject_masked(buf: SpeciesBuffer, x: Array, v: Array, w: Array,
     buffer surfaces the overflow instead. ``accepted`` marks the candidates
     that landed (the distributed engine deposits exactly those into the
     carried charge density).
+
+    The slot search is a full-capacity ``free_slots`` scan per call; hot
+    paths that inject every step should carry a ``FreeSlotRing`` instead and
+    go straight to ``inject_at``.
     """
     m = x.shape[0]
     # rank of each candidate among the selected ones
@@ -197,15 +222,94 @@ def inject_masked(buf: SpeciesBuffer, x: Array, v: Array, w: Array,
     slots = free_slots(buf, m)                       # (m,) first m dead slots
     dest = jnp.where(mask, slots[jnp.clip(rank, 0, m - 1)], buf.capacity)
     ok = mask & (dest < buf.capacity)
-    dest = jnp.where(ok, dest, buf.capacity)         # scatter-drop sentinel
-    out = SpeciesBuffer(
-        x=buf.x.at[dest].set(x, mode="drop"),
-        v=buf.v.at[dest].set(v, mode="drop"),
-        w=buf.w.at[dest].set(w, mode="drop"),
-        alive=buf.alive.at[dest].set(True, mode="drop"),
-    )
+    out = inject_at(buf, dest, x, v, w, ok)
     n_dropped = jnp.sum((mask & ~ok).astype(jnp.int32))
     return out, n_dropped, ok
+
+
+# ---- persistent free-slot ring ---------------------------------------------
+# ``inject_masked`` re-discovers dead slots with an O(capacity) ``nonzero``
+# scan on every call — fine for occasional sources, but the distributed
+# engine's migration merge injects every step, and that scan made the merge
+# phase scale with total capacity instead of with the arrival count. The ring
+# amortizes it: dead-slot indices are maintained INCREMENTALLY (killed /
+# absorbed particles push their slot, injected arrivals pop one), so the
+# steady-state cost is O(arrivals), independent of capacity. A full scan
+# remains only at init and after a wholesale reorder (``compact`` /
+# rebalance), where the free set is recomputed from the alive mask.
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("slots", "head", "count"), meta_fields=())
+@dataclasses.dataclass
+class FreeSlotRing:
+    """FIFO of currently-dead slot indices for one fixed-capacity buffer.
+
+    ``slots`` is a circular buffer of length R >= the maximum number of
+    simultaneously-free slots (R = capacity always suffices); entries at
+    positions ``head .. head+count-1`` (mod R) are live, anything else is
+    stale. Invariant: the live entries are exactly the dead slots of the
+    buffer the ring tracks, minus slots already pre-claimed by in-flight
+    arrivals — each listed at most once.
+    """
+
+    slots: Array   # (R,) int32 slot indices
+    head: Array    # ()   int32 read cursor
+    count: Array   # ()   int32 live entries
+
+    @property
+    def ring_capacity(self) -> int:
+        return self.slots.shape[-1]
+
+
+def ring_init(alive: Array) -> FreeSlotRing:
+    """Build a ring from an alive mask (the one full O(cap) scan)."""
+    cap = alive.shape[0]
+    slots = jnp.nonzero(~alive, size=cap, fill_value=cap)[0].astype(jnp.int32)
+    return FreeSlotRing(slots=slots, head=jnp.zeros((), jnp.int32),
+                        count=jnp.sum((~alive).astype(jnp.int32)))
+
+
+def ring_from_counts(alive_count: Array, cap: int) -> FreeSlotRing:
+    """Ring for a freshly compacted buffer: free slots are [count, cap)."""
+    ar = jnp.arange(cap, dtype=jnp.int32)
+    slots = jnp.where(ar + alive_count < cap, ar + alive_count, cap)
+    return FreeSlotRing(slots=slots, head=jnp.zeros((), jnp.int32),
+                        count=(cap - alive_count).astype(jnp.int32))
+
+
+def ring_push(ring: FreeSlotRing, idx: Array, ok: Array) -> FreeSlotRing:
+    """Append the slots freed this step. ``idx`` (M,) are slot indices of
+    particles that just died (killed, absorbed, migrated away); ``ok`` masks
+    the real ones. O(M) — never scans the buffer."""
+    r = ring.slots.shape[0]
+    ok = ok.astype(bool)
+    rank = jnp.cumsum(ok.astype(jnp.int32)) - 1
+    pos = jnp.mod(ring.head + ring.count + rank, r)
+    pos = jnp.where(ok, pos, r)                      # scatter-drop sentinel
+    slots = ring.slots.at[pos].set(idx.astype(jnp.int32), mode="drop")
+    return FreeSlotRing(slots=slots, head=ring.head,
+                        count=ring.count + jnp.sum(ok.astype(jnp.int32)))
+
+
+def ring_claim(ring: FreeSlotRing, want: Array,
+               sentinel: int) -> tuple[FreeSlotRing, Array, Array]:
+    """Pop one slot per ``want`` candidate, in order.
+
+    Returns (ring, dest, ok): ``dest`` (M,) holds a pre-claimed dead slot
+    where ``ok``, the ``sentinel`` (typically the buffer capacity) where the
+    candidate lost — either ``want`` was False or the ring ran dry (the
+    caller reports those as drops). O(M)."""
+    r = ring.slots.shape[0]
+    want = want.astype(bool)
+    rank = jnp.cumsum(want.astype(jnp.int32)) - 1
+    ok = want & (rank < ring.count)
+    pos = jnp.mod(ring.head + jnp.clip(rank, 0, r - 1), r)
+    dest = jnp.where(ok, ring.slots[pos], sentinel)
+    n = jnp.sum(ok.astype(jnp.int32))
+    out = FreeSlotRing(slots=ring.slots, head=jnp.mod(ring.head + n, r),
+                       count=ring.count - n)
+    return out, dest, ok
 
 
 def inject(buf: SpeciesBuffer, x: Array, v: Array, w: Array,

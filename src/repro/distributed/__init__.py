@@ -1,7 +1,8 @@
 """Asynchronous multi-device PIC engine (the paper's §4, TPU/JAX-native).
 
 Concept map — how the paper's OpenMP/OpenACC asynchrony constructs land on
-JAX/XLA primitives in this package:
+JAX/XLA primitives in this package (the expanded, per-phase version lives
+in ``docs/architecture.md``):
 
 =====================  =====================================================
 Paper construct        JAX construct here
@@ -18,6 +19,13 @@ async(n) queues        ``EngineConfig.async_n`` interleaved slices of the
                        (double-buffered) and consumed only by the deferred
                        merge — the data-flow edges ARE the depend clauses
 MPI_Isend/Irecv        ``jax.lax.ppermute`` of fixed-size send packs
+BIT1 linked-list       ``particles.FreeSlotRing`` carried in ``EngineState``:
+free-slot reuse        leavers push their packed slot indices, arrivals pop
+                       pre-claimed slots, the scatter defers to the next
+                       step's ingest — the merge never scans the buffers
+OpenMP dynamic         ``EngineConfig.rebalance_every``: periodic compact +
+scheduling             interleaved re-split keeps per-queue occupancy even
+                       (``queue_occ`` / ``queue_skew`` diagnostics)
 MPI_Allgather (field)  eliminated: ``halo.py`` exchanges edge nodes with
                        ``ppermute`` and distributes the exact double-prefix
                        Poisson solve with scalar-only gathers
@@ -30,12 +38,14 @@ package (same DomainConfig / make_distributed_step / init_distributed_state
 API, async_n=1).
 """
 
-from repro.distributed.engine import (EngineConfig, PHASES, init_engine_state,
+from repro.distributed.engine import (EngineConfig, EngineState, PHASES,
+                                      attach_engine_state, init_engine_state,
                                       make_engine_step)
-from repro.distributed.perf import (phase_breakdown, scaling_metrics,
-                                    write_scaling_json)
+from repro.distributed.perf import (phase_breakdown, queue_stats,
+                                    scaling_metrics, write_scaling_json)
 
 __all__ = [
-    "EngineConfig", "PHASES", "init_engine_state", "make_engine_step",
-    "phase_breakdown", "scaling_metrics", "write_scaling_json",
+    "EngineConfig", "EngineState", "PHASES", "attach_engine_state",
+    "init_engine_state", "make_engine_step", "phase_breakdown",
+    "queue_stats", "scaling_metrics", "write_scaling_json",
 ]

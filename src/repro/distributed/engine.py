@@ -14,20 +14,42 @@ queue *k+1* runs the mover. The JAX mapping:
   exactly what ``nowait`` buys the paper (and what CUDA streams buy its
   multi-GPU version);
 * the received packs are **double-buffered**: they are held as live values
-  (``depend(in)`` edges) while later queues compute, and merged into the
-  free slots only after every queue of every species group has been pushed.
+  (``depend(in)`` edges) while later queues compute, and claim their landing
+  slots only after every queue of every species group has been pushed.
 
-The per-step phase order matches BIT1's cycle: halo field solve (see
-``halo.py`` — no full-rho all_gather) -> per-queue fused push+deposit ->
-per-queue migration exchange -> deferred merge -> MC collisions ->
-diagnostics psum.
+The per-step phase order matches BIT1's cycle, with one JAX-native addition:
+ingest (scatter last step's arrivals + periodic queue rebalance) -> halo
+field solve (see ``halo.py`` — no full-rho all_gather) -> per-queue fused
+push+deposit -> per-queue migration exchange -> deferred merge -> MC
+collisions -> diagnostics psum.
 
-Migration overflow (fixed here, vs the seed's ``exchange_species``): every
-boundary crosser used to be killed even when the fixed-size pack truncated,
-silently losing particles and charge. Now only the crossers that actually
-won a pack slot (and, per direction, a send-budget slot) leave; the rest
-stay local — clamped just inside the slab so the next gather is in-bounds —
-and retry next step, reported via the ``migration_overflow`` diagnostic.
+Free-slot ring (the merge-phase fix): the seed merge re-discovered dead
+slots with one full-capacity ``free_slots`` scan per species per step, so
+the ``merge`` probe time scaled with TOTAL capacity, not with the arrival
+count. The engine now carries a persistent ``particles.FreeSlotRing`` per
+capacity group in its state: migration leavers and wall-absorbed particles
+push their (already-packed, O(max_migration)) slot indices, arrivals pop
+pre-claimed slots, and the scatter itself is **deferred into the next
+step's ingest** — the pass that is about to stream the whole buffer through
+the push anyway. The merge phase keeps only O(max_migration) ring
+bookkeeping plus the carried-rho arrival deposit. In-flight arrivals live
+in ``EngineState.pending`` and are counted by the step diagnostics, so
+conservation is exact at every step boundary.
+
+Queue-adaptive rebalance: the interleaved split is only even while
+occupancy is; absorption/ionization churn drifts the per-queue alive counts
+apart (per-species ``queue_occ`` / ``queue_skew`` diagnostics expose this).
+``EngineConfig.rebalance_every = K`` compacts each capacity group (alive
+slots first, stable) every K steps under ``lax.cond`` and rebuilds the ring
+from the compacted counts — the interleaved re-split is then even again for
+every species, bounding the skew between consecutive rebalances.
+
+Migration overflow (fixed in PR 2, vs the seed's ``exchange_species``):
+every boundary crosser used to be killed even when the fixed-size pack
+truncated, silently losing particles and charge. Now only the crossers that
+actually won a pack slot (and, per direction, a send-budget slot) leave;
+the rest stay local — clamped just inside the slab so the next gather is
+in-bounds — and retry next step, reported via ``migration_overflow``.
 
 Carried charge (``strategy='fused'``): the in-pass deposit of each queue is
 accumulated into one local rho, corrected by subtracting the leavers' edge
@@ -38,6 +60,7 @@ never re-reads the full particle arrays. Charge is conserved exactly.
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -45,8 +68,10 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import collisions, diagnostics, mover
 from repro.core.grid import Grid1D, deposit_stacked, deposit_windowed
-from repro.core.particles import (SpeciesBuffer, StackedSpecies, init_uniform,
-                                  inject_masked, kill, stack_species, take)
+from repro.core.particles import (FreeSlotRing, SpeciesBuffer, StackedSpecies,
+                                  init_uniform, inject_at, inject_masked,
+                                  kill, ring_claim, ring_from_counts,
+                                  ring_init, ring_push, stack_species, take)
 from repro.core.pic import PICConfig, PICState
 from repro.core.pic import _carries_rho as pic_carries_rho
 from repro.distributed import halo
@@ -56,7 +81,7 @@ Array = jax.Array
 # cumulative phase checkpoints for the perf probes (see perf.py): a step
 # built with upto=<phase> executes the pipeline through that phase and
 # returns, so consecutive differences give per-phase wall times
-PHASES = ("field", "push", "migrate", "merge", "full")
+PHASES = ("ingest", "field", "push", "migrate", "merge", "full")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,13 +91,17 @@ class EngineConfig:
     ``async_n`` is the paper's async(n): the number of migration/compute
     queues each domain's particles are split into. ``max_migration`` is the
     per-species/per-direction/per-step send budget for the whole domain,
-    split evenly across queues.
+    split evenly across queues. ``rebalance_every = K`` re-evens the queue
+    split every K steps (0 disables): each capacity group is compacted
+    (alive first) and the free-slot ring rebuilt, so per-queue occupancy
+    skew stays bounded under absorption/ionization churn.
     """
     pic: PICConfig                       # cfg.nc == GLOBAL cell count
     axis_names: tuple[str, ...] = ("data",)
     async_n: int = 1
     max_migration: int = 2048            # per species/direction/step
     species_capacity_local: int | None = None  # default: global cap / D
+    rebalance_every: int = 0             # 0 = never re-split the queues
 
     def __post_init__(self):
         object.__setattr__(self, "axis_names", tuple(self.axis_names))
@@ -83,6 +112,9 @@ class EngineConfig:
                 f"async_n ({self.async_n}) must divide max_migration "
                 f"({self.max_migration}) so every queue gets an equal "
                 f"send budget")
+        if self.rebalance_every < 0:
+            raise ValueError(
+                f"rebalance_every must be >= 0, got {self.rebalance_every}")
         if self.pic.wall_emission:
             raise ValueError(
                 "the distributed engine does not implement the wall-emission"
@@ -110,6 +142,68 @@ class EngineConfig:
     def queue_migration(self) -> int:
         return self.max_migration // self.async_n
 
+    @property
+    def pending_rows(self) -> int:
+        """Arrival rows carried between steps: 2 directions x async_n queues
+        x the per-queue budget = 2 * max_migration, independent of async_n."""
+        return 2 * self.max_migration
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("x", "v", "w", "alive", "dest"), meta_fields=())
+@dataclasses.dataclass
+class PendingArrivals:
+    """Arrivals received this step, scattered at the NEXT step's ingest.
+
+    Rows are the concatenated per-queue migration packs of one capacity
+    group; ``dest`` holds the pre-claimed dead slot of each accepted row
+    (the local capacity as a drop sentinel otherwise). Because the slots are
+    claimed from the free-slot ring at merge time, the eventual scatter is
+    gather-free — and deferring it merges it into the pass that streams the
+    whole buffer anyway. The step diagnostics count pending rows as resident
+    particles, so conservation holds at every step boundary.
+    """
+
+    x: Array      # (S, M)
+    v: Array      # (S, M, 3)
+    w: Array      # (S, M)
+    alive: Array  # (S, M) bool — accepted rows only
+    dest: Array   # (S, M) int32 pre-claimed slot, cap = dropped
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("pic", "rings", "pending"), meta_fields=())
+@dataclasses.dataclass
+class EngineState:
+    """Engine state: the PIC state plus the async-merge bookkeeping.
+
+    ``rings`` / ``pending`` hold one entry per capacity group (matching
+    ``_capacity_groups`` order), each batched over the group's species axis.
+    Both are empty tuples when the configuration routes through the legacy
+    full-scan merge (see ``_uses_ring``).
+    """
+
+    pic: PICState
+    rings: tuple[FreeSlotRing, ...]
+    pending: tuple[PendingArrivals, ...]
+
+    # back-compat accessors: call sites written against PICState keep working
+    @property
+    def species(self):
+        return self.pic.species
+
+    @property
+    def key(self):
+        return self.pic.key
+
+    @property
+    def step(self):
+        return self.pic.step
+
+    @property
+    def rho(self):
+        return self.pic.rho
+
 
 def _carries_rho(ecfg: EngineConfig) -> bool:
     """The carried in-pass deposit is exact only when nothing changes the
@@ -117,6 +211,15 @@ def _carries_rho(ecfg: EngineConfig) -> bool:
     so the two paths can never diverge (wall emission, the one clause that
     differs structurally, is rejected by EngineConfig outright)."""
     return pic_carries_rho(ecfg.pic)
+
+
+def _uses_ring(ecfg: EngineConfig) -> bool:
+    """The persistent free-slot ring is exact while the engine's OWN kill /
+    inject sites (migration, wall absorption, the merge) are the only ones
+    touching the alive masks. MC ionization kills neutrals and births
+    electron/ion pairs through its own full-scan injector without telling
+    the ring, so ionization runs keep the legacy full-scan merge."""
+    return ecfg.pic.ionization is None
 
 
 def _capacity_groups(ecfg: EngineConfig, mesh: Mesh) -> list[tuple[int, ...]]:
@@ -129,8 +232,8 @@ def _capacity_groups(ecfg: EngineConfig, mesh: Mesh) -> list[tuple[int, ...]]:
 
 
 def _split_queues(st: StackedSpecies, n: int) -> list[StackedSpecies]:
-    """Interleaved queue views: slot c -> queue c % n (keeps the initial
-    contiguous live block evenly spread across queues)."""
+    """Interleaved queue views: slot c -> queue c % n (keeps a compacted
+    live block evenly spread across queues)."""
     if n == 1:
         return [st]
 
@@ -155,16 +258,24 @@ def _merge_queues(queues: list, n: int):
     return jax.tree.map(mg, *queues)
 
 
+def _queue_occupancy(alive: Array, n: int) -> Array:
+    """(cap,) alive mask -> (n,) per-queue alive counts (slot c -> c % n)."""
+    return jnp.sum(alive.reshape(-1, n).astype(jnp.int32), axis=0)
+
+
 def _exchange_queue(q, l_local: float, m: int, boundary: str,
                     is_first: Array, is_last: Array):
     """Pack one queue's boundary crossers (vmapped over the species axis).
 
-    Returns (kept, pack_l, pack_r, leaver_x, leaver_w, diag):
-    ``pack_l``/``pack_r`` are the fixed-size send buffers (in the receiver's
-    frame); ``leaver_x``/``leaver_w`` cover every particle that left —
-    sent or wall-absorbed — at its raw post-push position, for the carried-rho
-    subtraction. Crossers that exceed the pack or the per-direction budget
-    stay local (clamped, retried next step) instead of being lost.
+    Returns (kept, pack_l, pack_r, leaver_x, leaver_w, freed_idx, freed_ok,
+    diag): ``pack_l``/``pack_r`` are the fixed-size send buffers (in the
+    receiver's frame); ``leaver_x``/``leaver_w`` cover every particle that
+    left — sent or wall-absorbed — at its raw post-push position, for the
+    carried-rho subtraction; ``freed_idx``/``freed_ok`` are the queue-local
+    slot indices those leavers vacated (already packed, so the free-slot
+    ring is fed without any additional scan). Crossers that exceed the pack
+    or the per-direction budget stay local (clamped, retried next step)
+    instead of being lost.
     """
 
     def pack_one(x, v, w, alive):
@@ -211,13 +322,15 @@ def _exchange_queue(q, l_local: float, m: int, boundary: str,
             "migration_overflow": jnp.sum(stay.astype(jnp.int32)),
             "wall_absorbed": jnp.sum(absorb.astype(jnp.int32)),
         }
-        return kept, pack_l, pack_r, packed.x, packed.w * ok, diag
+        return kept, pack_l, pack_r, packed.x, packed.w * ok, idx, ok, diag
 
     return jax.vmap(pack_one)(q.x, q.v, q.w, q.alive)
 
 
 def _inject_rows(full: SpeciesBuffer, cand: SpeciesBuffer):
-    """vmapped inject of (S, ncand) candidates into (S, cap) buffers."""
+    """vmapped full-scan inject of (S, ncand) candidates into (S, cap)
+    buffers — the legacy merge used when the free-slot ring is unavailable
+    (``_uses_ring`` False)."""
 
     def one(bx, bv, bw, ba, cx, cv, cw, ca):
         return inject_masked(SpeciesBuffer(x=bx, v=bv, w=bw, alive=ba),
@@ -227,19 +340,69 @@ def _inject_rows(full: SpeciesBuffer, cand: SpeciesBuffer):
                          cand.x, cand.v, cand.w, cand.alive)
 
 
-def _state_specs(ecfg: EngineConfig, carried: bool) -> PICState:
+def _flush_pending(st: StackedSpecies, p: PendingArrivals) -> StackedSpecies:
+    """Scatter pre-claimed arrivals into their ring-assigned slots (vmapped
+    over the species axis). The slots were dead when claimed and nothing
+    re-fills slots between merge and ingest, so this is exact."""
+
+    def one(bx, bv, bw, ba, d, cx, cv, cw, ca):
+        out = inject_at(SpeciesBuffer(x=bx, v=bv, w=bw, alive=ba),
+                        d, cx, cv, cw, ca)
+        return out.x, out.v, out.w, out.alive
+
+    x, v, w, alive = jax.vmap(one)(st.x, st.v, st.w, st.alive,
+                                   p.dest, p.x, p.v, p.w, p.alive)
+    return StackedSpecies(x=x, v=v, w=w, alive=alive)
+
+
+def _empty_pending(s: int, m: int, cap: int, dtype) -> PendingArrivals:
+    return PendingArrivals(
+        x=jnp.zeros((s, m), dtype), v=jnp.zeros((s, m, 3), dtype),
+        w=jnp.zeros((s, m), dtype), alive=jnp.zeros((s, m), bool),
+        dest=jnp.full((s, m), cap, jnp.int32))
+
+
+def _compact_group(st: StackedSpecies) -> tuple[StackedSpecies, Array]:
+    """Stable per-species compaction (alive first): the interleaved queue
+    split of the result is occupancy-even by construction. Returns the
+    compacted group and its per-species alive counts."""
+
+    def one(x, v, w, alive):
+        order = jnp.argsort(~alive, stable=True)
+        return x[order], v[order], w[order], alive[order]
+
+    x, v, w, alive = jax.vmap(one)(st.x, st.v, st.w, st.alive)
+    out = StackedSpecies(x=x, v=v, w=w, alive=alive)
+    return out, out.counts()
+
+
+def _state_specs(ecfg: EngineConfig, mesh: Mesh) -> EngineState:
     part = P(ecfg.axis_names)
-    return PICState(
+    carried = _carries_rho(ecfg)
+    pic = PICState(
         species=tuple(
             SpeciesBuffer(x=part, v=part, w=part, alive=part)
             for _ in ecfg.pic.species),
         key=part, step=P(), rho=part if carried else None)
+    if not _uses_ring(ecfg):
+        return EngineState(pic=pic, rings=(), pending=())
+    groups = _capacity_groups(ecfg, mesh)
+    rings = tuple(FreeSlotRing(slots=part, head=part, count=part)
+                  for _ in groups)
+    pending = tuple(
+        PendingArrivals(x=part, v=part, w=part, alive=part, dest=part)
+        for _ in groups)
+    return EngineState(pic=pic, rings=rings, pending=pending)
+
+
+def _lift_tree(tree):
+    """Re-attach the leading sharded (1, ...) device axis to every leaf."""
+    return jax.tree.map(lambda a: a[None], tree)
 
 
 def _lift(species, key, step, rho) -> PICState:
-    """Re-attach the leading sharded (1, ...) device axis."""
     return PICState(
-        species=tuple(jax.tree.map(lambda a: a[None], b) for b in species),
+        species=tuple(_lift_tree(b) for b in species),
         key=key[None], step=step, rho=rho)
 
 
@@ -263,7 +426,11 @@ def make_engine_step(ecfg: EngineConfig, mesh: Mesh, *, upto: str = "full",
     n_q = ecfg.async_n
     m_q = ecfg.queue_migration
     carried = _carries_rho(ecfg)
+    use_ring = _uses_ring(ecfg)
+    reb_k = ecfg.rebalance_every
     groups = _capacity_groups(ecfg, mesh)
+    group_caps = [ecfg.local_cap(cfg.species[idxs[0]], mesh)
+                  for idxs in groups]
     for i, sc in enumerate(cfg.species):
         cap_l = ecfg.local_cap(sc, mesh)
         if cap_l % n_q != 0:
@@ -272,8 +439,11 @@ def make_engine_step(ecfg: EngineConfig, mesh: Mesh, *, upto: str = "full",
                 f"of species {sc.name!r}")
     axis_names = ecfg.axis_names
 
-    def local_step(state: PICState):
+    def local_step(estate: EngineState):
+        state = estate.pic
         species = [jax.tree.map(lambda a: a[0], b) for b in state.species]
+        rings = [jax.tree.map(lambda a: a[0], r) for r in estate.rings]
+        pend_in = [jax.tree.map(lambda a: a[0], p) for p in estate.pending]
         key = state.key[0]
         r = halo.rank(axis_names)
         is_first = r == 0
@@ -286,6 +456,55 @@ def make_engine_step(ecfg: EngineConfig, mesh: Mesh, *, upto: str = "full",
             dts = jnp.asarray([cfg.dt * sc.stride for sc in scs], dtype)
             charges = jnp.asarray([sc.charge for sc in scs], dtype)
             return scs, qm, dts, charges
+
+        def write_back(idxs, full):
+            for j, i in enumerate(idxs):
+                species[i] = SpeciesBuffer(
+                    x=full.x[j], v=full.v[j], w=full.w[j],
+                    alive=full.alive[j])
+
+        def pack_state(rho, pend_out):
+            return EngineState(
+                pic=_lift(species, key, state.step + 1, rho),
+                rings=tuple(_lift_tree(rg) for rg in rings),
+                pending=tuple(_lift_tree(p) for p in pend_out))
+
+        # ---- ingest: land last step's arrivals in their pre-claimed slots
+        #      (the scatter deferred out of the merge phase), then — every
+        #      rebalance_every steps — compact and re-split the queues ----
+        rebalance_now = None
+        if reb_k > 0:
+            rebalance_now = (state.step > 0) & (state.step % reb_k == 0)
+        for g, idxs in enumerate(groups):
+            cap_g = group_caps[g]
+            touched = use_ring or reb_k > 0
+            if not touched:
+                continue
+            st = stack_species([species[i] for i in idxs])
+            if use_ring:
+                st = _flush_pending(st, pend_in[g])
+            if reb_k > 0:
+                if use_ring:
+                    def reb(op):
+                        new, counts = _compact_group(op[0])
+                        return new, jax.vmap(
+                            lambda c: ring_from_counts(c, cap_g))(counts)
+
+                    st, rings[g] = jax.lax.cond(
+                        rebalance_now, reb, lambda op: op, (st, rings[g]))
+                else:
+                    st = jax.lax.cond(
+                        rebalance_now, lambda s: _compact_group(s)[0],
+                        lambda s: s, st)
+            write_back(idxs, st)
+        empty_pend = [
+            _empty_pending(len(idxs), ecfg.pending_rows, group_caps[g],
+                           species[idxs[0]].x.dtype)
+            for g, idxs in enumerate(groups)] if use_ring else []
+        if upto == "ingest":
+            aux = sum(jnp.sum(b.alive.astype(jnp.float32))
+                      for b in species).reshape(1)
+            return pack_state(state.rho, empty_pend), aux
 
         # ---- field phase: halo exchange, never a full-rho all_gather ----
         if not cfg.field_solve:
@@ -305,7 +524,7 @@ def make_engine_step(ecfg: EngineConfig, mesh: Mesh, *, upto: str = "full",
                 smoothing_passes=cfg.smoothing_passes, axis_names=axis_names,
                 mesh=mesh, is_first=is_first, is_last=is_last)
         if upto == "field":
-            return _lift(species, key, state.step + 1, state.rho), e[None]
+            return pack_state(state.rho, empty_pend), e[None]
 
         diag: dict = {}
 
@@ -318,12 +537,12 @@ def make_engine_step(ecfg: EngineConfig, mesh: Mesh, *, upto: str = "full",
         # ---- async(n) pipeline: push queue k, issue its migration
         #      collective, then push queue k+1 while k's permute flies ----
         staged = []
-        for idxs in groups:
+        for g, idxs in enumerate(groups):
             scs, qm, dts, charges = group_meta(idxs)
             strides = [sc.stride for sc in scs]
             st = stack_species([species[i] for i in idxs])
-            kept_qs, pending = [], []
-            for q in _split_queues(st, n_q):
+            kept_qs, pending_packs = [], []
+            for k_q, q in enumerate(_split_queues(st, n_q)):
                 out, hl, hr, pdiag, rho_q = mover.push_stacked(
                     q, e, grid_local, qm, dts, b=cfg.b_field,
                     boundary="open", gather_mode=cfg.gather_mode,
@@ -344,62 +563,80 @@ def make_engine_step(ecfg: EngineConfig, mesh: Mesh, *, upto: str = "full",
                         rho_acc = rho_acc + rho_q   # keep the in-pass deposit
                     kept_qs.append(out)             # live in the probe output
                     continue
-                kept, pack_l, pack_r, lv_x, lv_w, dmig = _exchange_queue(
+                (kept, pack_l, pack_r, lv_x, lv_w, free_idx, free_ok,
+                 dmig) = _exchange_queue(
                     out, l_local, m_q, cfg.boundary, is_first, is_last)
                 if carried:
                     # leavers were deposited at their raw (edge-clipped)
                     # positions by the in-pass deposit; take them back out
                     rho_acc = rho_acc + rho_q - deposit_windowed(
                         grid_local, lv_x, charges[:, None] * lv_w)
+                if use_ring:
+                    # leaver slots are free from here on: feed the ring from
+                    # the already-packed indices (queue slot j -> global
+                    # slot j * n_q + k_q), no extra scan
+                    rings[g] = jax.vmap(ring_push)(
+                        rings[g], free_idx * n_q + k_q, free_ok)
                 recv_r = halo.ppermute_tree(pack_l, axis_names, -1, mesh)
                 recv_l = halo.ppermute_tree(pack_r, axis_names, +1, mesh)
                 kept_qs.append(StackedSpecies(
                     x=kept.x, v=kept.v, w=kept.w, alive=kept.alive))
-                pending.append((recv_l, recv_r))
+                pending_packs.append((recv_l, recv_r))
                 for j, sc in enumerate(scs):
                     for k, v in dmig.items():
                         dacc(sc.name, k, v[j])
-            staged.append((idxs, charges, kept_qs, pending))
+            staged.append((idxs, charges, kept_qs, pending_packs))
 
         if upto in ("push", "migrate"):
-            out_species = list(species)
             aux = e
-            for idxs, _, kept_qs, pending in staged:
-                full = _merge_queues(kept_qs, n_q)
-                for j, i in enumerate(idxs):
-                    out_species[i] = SpeciesBuffer(
-                        x=full.x[j], v=full.v[j], w=full.w[j],
-                        alive=full.alive[j])
+            for idxs, _, kept_qs, pending_packs in staged:
+                write_back(idxs, _merge_queues(kept_qs, n_q))
                 # keep the received packs live in the probe output so the
                 # migration collectives are not dead-code-eliminated
-                for recv in pending:
+                for recv in pending_packs:
                     for leaf in jax.tree.leaves(recv):
                         aux = aux + jnp.sum(leaf.astype(jnp.float32))
             rho_out = rho_acc[None] if carried else state.rho
-            return _lift(out_species, key, state.step + 1, rho_out), aux[None]
+            return pack_state(rho_out, empty_pend), aux[None]
 
-        # ---- deferred merge: every queue's collective has been issued;
-        #      inject all arrivals in one free-slot scan per species ----
-        for idxs, charges, kept_qs, pending in staged:
+        # ---- deferred merge: every queue's collective has been issued.
+        #      Ring path: claim a dead slot per arrival from the free-slot
+        #      ring (O(max_migration)) and carry the rows as pending — the
+        #      scatter happens at the NEXT step's ingest. Legacy path
+        #      (ionization active): one full-capacity free-slot scan per
+        #      species, scattered immediately. ----
+        pend_out = list(empty_pend)
+        for g, (idxs, charges, kept_qs, pending_packs) in enumerate(staged):
             scs = [cfg.species[i] for i in idxs]
+            cap_g = group_caps[g]
             full = _merge_queues(kept_qs, n_q)
-            packs = [p for pair in pending for p in pair]
+            packs = [p for pair in pending_packs for p in pair]
             cand = jax.tree.map(
                 lambda *xs: jnp.concatenate(xs, axis=1), *packs)
-            merged, dropped, accepted = _inject_rows(full, cand)
+            if use_ring:
+                rings[g], dest, accepted = jax.vmap(
+                    lambda rg, wnt: ring_claim(rg, wnt, cap_g))(
+                    rings[g], cand.alive)
+                pend_out[g] = PendingArrivals(
+                    x=cand.x, v=cand.v, w=cand.w * accepted,
+                    alive=cand.alive & accepted, dest=dest)
+                dropped = jnp.sum((cand.alive & ~accepted).astype(jnp.int32),
+                                  axis=1)
+                write_back(idxs, full)
+            else:
+                merged, dropped, accepted = _inject_rows(full, cand)
+                write_back(idxs, merged)
             if carried:
                 rho_acc = rho_acc + deposit_windowed(
                     grid_local, cand.x, charges[:, None] * cand.w * accepted)
-            for j, (i, sc) in enumerate(zip(idxs, scs)):
-                species[i] = SpeciesBuffer(
-                    x=merged.x[j], v=merged.v[j], w=merged.w[j],
-                    alive=merged.alive[j])
+            for j, sc in enumerate(scs):
                 dacc(sc.name, "merge_dropped", dropped[j])
         rho_out = rho_acc[None] if carried else state.rho
         if upto == "merge":
-            return _lift(species, key, state.step + 1, rho_out), e[None]
+            return pack_state(rho_out, pend_out), e[None]
 
-        # ---- MC collisions (the paper's §3.3 scenario) ----
+        # ---- MC collisions (the paper's §3.3 scenario; legacy merge path,
+        #      see _uses_ring) ----
         if cfg.ionization is not None:
             ni, ei, ii = cfg.ionization
             key, sub = jax.random.split(key)
@@ -412,17 +649,37 @@ def make_engine_step(ecfg: EngineConfig, mesh: Mesh, *, upto: str = "full",
             species[ni], species[ei], species[ii] = neu, ele, ion
             diag.update(dion)
 
-        # ---- global diagnostics (psum over domains) ----
-        for sc, buf in zip(cfg.species, species):
+        # ---- global diagnostics (psum over domains; skew uses pmax) ----
+        # in-flight arrivals are resident particles: reduce over an
+        # EFFECTIVE buffer with pending scattered into its (dead, w == 0)
+        # pre-claimed slots. The per-slot writes land on exact zeros, so the
+        # reductions match the post-ingest buffer bitwise — a separate
+        # pending sum term would flip the charge total by an ulp and break
+        # the engine's exact cross-D conservation contract.
+        eff = list(species)
+        if use_ring:
+            for g, idxs in enumerate(groups):
+                st = _flush_pending(
+                    stack_species([species[i] for i in idxs]), pend_out[g])
+                for j, i in enumerate(idxs):
+                    eff[i] = SpeciesBuffer(
+                        x=st.x[j], v=st.v[j], w=st.w[j], alive=st.alive[j])
+        for sc, buf in zip(cfg.species, eff):
             diag[f"{sc.name}/count"] = buf.count()
             diag[f"{sc.name}/ke"] = diagnostics.kinetic_energy(buf, sc.mass)
             diag[f"{sc.name}/charge"] = diagnostics.total_charge(
                 buf, sc.charge)
-        diag = {k: jax.lax.psum(v, axis_names) for k, v in diag.items()}
+            occ = _queue_occupancy(buf.alive, n_q)
+            diag[f"{sc.name}/queue_occ"] = occ
+            diag[f"{sc.name}/queue_skew"] = jnp.max(occ) - jnp.min(occ)
+        diag = {k: (jax.lax.pmax(v, axis_names)
+                    if k.endswith("/queue_skew")
+                    else jax.lax.psum(v, axis_names))
+                for k, v in diag.items()}
 
-        return _lift(species, key, state.step + 1, rho_out), diag
+        return pack_state(rho_out, pend_out), diag
 
-    specs_state = _state_specs(ecfg, carried)
+    specs_state = _state_specs(ecfg, mesh)
     out_specs = ((specs_state, P()) if upto == "full"
                  else (specs_state, P(axis_names)))
     step = halo.shard_map(
@@ -432,8 +689,45 @@ def make_engine_step(ecfg: EngineConfig, mesh: Mesh, *, upto: str = "full",
     return jax.jit(step, **donate_kw)
 
 
+def _engine_extras(ecfg: EngineConfig, mesh: Mesh, bufs):
+    """Rings + empty pending for per-domain species buffers (init-time only:
+    the one full free-slot scan the ring design allows)."""
+    groups = _capacity_groups(ecfg, mesh)
+    rings, pending = [], []
+    for idxs in groups:
+        st = stack_species([bufs[i] for i in idxs])
+        rings.append(jax.vmap(ring_init)(st.alive))
+        pending.append(_empty_pending(
+            len(idxs), ecfg.pending_rows, st.capacity, st.x.dtype))
+    return tuple(rings), tuple(pending)
+
+
+def attach_engine_state(ecfg: EngineConfig, mesh: Mesh,
+                        state: PICState) -> EngineState:
+    """Wrap an externally built (device-lifted) PICState into an EngineState:
+    free-slot rings rebuilt from the alive masks, no in-flight arrivals.
+
+    Use this to feed the engine a state produced by ``pic.init_state`` (via
+    the usual ``[None]`` lift) or by an older checkpoint.
+    """
+    if not _uses_ring(ecfg):
+        return EngineState(pic=state, rings=(), pending=())
+
+    def local(st: PICState) -> EngineState:
+        bufs = [jax.tree.map(lambda a: a[0], b) for b in st.species]
+        rings, pending = _engine_extras(ecfg, mesh, bufs)
+        return EngineState(
+            pic=st, rings=tuple(_lift_tree(rg) for rg in rings),
+            pending=tuple(_lift_tree(p) for p in pending))
+
+    specs = _state_specs(ecfg, mesh)
+    f = halo.shard_map(local, mesh=mesh, in_specs=(specs.pic,),
+                       out_specs=specs, check_vma=False)
+    return jax.jit(f)(state)
+
+
 def init_engine_state(ecfg: EngineConfig, mesh: Mesh,
-                      seed: int = 0) -> PICState:
+                      seed: int = 0) -> EngineState:
     """Per-domain local init, sharded over the mesh domain axes."""
     cfg = ecfg.pic
     ncl = ecfg.local_nc(mesh)
@@ -441,9 +735,10 @@ def init_engine_state(ecfg: EngineConfig, mesh: Mesh,
     l_local = ncl * cfg.dx
     d = ecfg.num_domains(mesh)
     carried = _carries_rho(ecfg)
+    use_ring = _uses_ring(ecfg)
     groups = _capacity_groups(ecfg, mesh)
 
-    def local_init() -> PICState:
+    def local_init() -> EngineState:
         r = halo.rank(ecfg.axis_names)
         key = jax.random.fold_in(jax.random.PRNGKey(seed), r)
         keys = jax.random.split(key, len(cfg.species) + 1)
@@ -463,10 +758,16 @@ def init_engine_state(ecfg: EngineConfig, mesh: Mesh,
                 st = stack_species([bufs[i] for i in idxs])
                 rho = rho + deposit_stacked(
                     grid_local, st.x, st.w, st.alive, charges)
-        return _lift(bufs, keys[-1], jnp.zeros((), jnp.int32),
-                     rho[None] if carried else None)
+        pic = _lift(bufs, keys[-1], jnp.zeros((), jnp.int32),
+                    rho[None] if carried else None)
+        if not use_ring:
+            return EngineState(pic=pic, rings=(), pending=())
+        rings, pending = _engine_extras(ecfg, mesh, bufs)
+        return EngineState(
+            pic=pic, rings=tuple(_lift_tree(rg) for rg in rings),
+            pending=tuple(_lift_tree(p) for p in pending))
 
-    specs_state = _state_specs(ecfg, carried)
+    specs_state = _state_specs(ecfg, mesh)
     init = halo.shard_map(local_init, mesh=mesh, in_specs=(),
                           out_specs=specs_state, check_vma=False)
     return jax.jit(init)()

@@ -34,7 +34,7 @@ import jax
 from repro.distributed import engine as engine_mod
 
 # per-phase labels derived from consecutive engine.PHASES checkpoints
-PHASE_LABELS = ("field", "push", "migrate", "merge", "collide_diag")
+PHASE_LABELS = ("ingest", "field", "push", "migrate", "merge", "collide_diag")
 
 
 def _time_fn(fn, *args, warmup: int = 1, iters: int = 3) -> float:
@@ -64,12 +64,37 @@ def phase_breakdown(ecfg, mesh, *, iters: int = 3, warmup: int = 1,
     for upto in engine_mod.PHASES:
         fn = engine_mod.make_engine_step(ecfg, mesh, upto=upto, donate=False)
         cum[upto] = _time_fn(fn, state, warmup=warmup, iters=iters)
-    phases = {"field": cum["field"]}
+    phases = {PHASE_LABELS[0]: cum[engine_mod.PHASES[0]]}
     for prev, cur, label in zip(engine_mod.PHASES, engine_mod.PHASES[1:],
                                 PHASE_LABELS[1:]):
         phases[label] = max(cum[cur] - cum[prev], 0.0)
     phases["total"] = cum["full"]
     return phases
+
+
+def queue_stats(ecfg, mesh, *, steps: int = 3, seed: int = 0,
+                state=None) -> dict:
+    """Per-queue occupancy and skew after ``steps`` engine steps.
+
+    Returns ``{"queue_occ": {species: [per-queue alive counts]},
+    "queue_skew": {species: worst-domain max-min}}`` from the engine's own
+    diagnostics — the observable the ``rebalance_every`` knob bounds.
+    """
+    import numpy as np
+
+    owns_state = state is None
+    if owns_state:
+        state = engine_mod.init_engine_state(ecfg, mesh, seed)
+    # donate only a state we created: a caller-provided one must stay valid
+    step = engine_mod.make_engine_step(ecfg, mesh, donate=owns_state)
+    diag = {}
+    for _ in range(max(steps, 1)):
+        state, diag = step(state)
+    occ = {k.rsplit("/", 1)[0]: [int(x) for x in np.asarray(v)]
+           for k, v in diag.items() if k.endswith("/queue_occ")}
+    skew = {k.rsplit("/", 1)[0]: int(np.asarray(v))
+            for k, v in diag.items() if k.endswith("/queue_skew")}
+    return {"queue_occ": occ, "queue_skew": skew}
 
 
 def scaling_metrics(per_domain: dict[int, dict[str, float]]) -> dict:

@@ -1,16 +1,19 @@
 """PIC launcher: run the paper's scenario, single- or multi-domain.
 
     PYTHONPATH=src python -m repro.launch.pic_run --steps 100 \
-        [--domains 4] [--async-n 2] \
+        [--domains 4] [--async-n 2] [--rebalance-every K] \
         [--strategy unified|explicit|async_batched|fused] \
         [--field-solve] [--diag-every K] [--phases]
 
 --domains > 1 runs the asynchronous multi-device engine
 (``repro.distributed``): the domain's particles are split into --async-n
-queues whose migration collectives overlap the next queue's push. If the
-process exposes fewer jax devices than --domains, emulated host devices are
-requested via XLA_FLAGS before jax initializes (a TPU slice provides real
-ones natively). --phases prints the per-phase timing breakdown.
+queues whose migration collectives overlap the next queue's push, and
+--rebalance-every K periodically compacts + re-splits the queues so their
+occupancy stays even under churn (per-queue counts and skew are printed).
+If the process exposes fewer jax devices than --domains, emulated host
+devices are requested via XLA_FLAGS before jax initializes (a TPU slice
+provides real ones natively). --phases prints the per-phase timing
+breakdown.
 """
 
 from __future__ import annotations
@@ -29,6 +32,9 @@ def main() -> None:
     ap.add_argument("--async-n", type=int, default=1,
                     help="migration/compute queues per domain (paper's "
                          "async(n))")
+    ap.add_argument("--rebalance-every", type=int, default=0,
+                    help="compact + re-split the async queues every K steps "
+                         "(0 = never); bounds per-queue occupancy skew")
     ap.add_argument("--strategy", default="unified",
                     choices=["unified", "explicit", "async_batched",
                              "fused"])
@@ -54,7 +60,7 @@ def main() -> None:
     import jax
     import numpy as np
 
-    from repro.configs.pic_bit1 import make_bench_config
+    from repro.configs.pic_bit1 import make_bench_config, make_engine_config
     from repro.core import pic
     from repro.distributed import engine, perf
     from repro.launch.mesh import make_debug_mesh
@@ -66,7 +72,8 @@ def main() -> None:
         cfg = dataclasses.replace(cfg, field_solve=True)
     t0 = time.perf_counter()
     mesh = ecfg = None
-    if args.domains == 1 and args.async_n == 1:
+    if (args.domains == 1 and args.async_n == 1
+            and args.rebalance_every == 0):
         state = pic.init_state(cfg, 0)
         final, diags = jax.block_until_ready(
             jax.jit(lambda s: pic.run(cfg, args.steps, state=s))(state))
@@ -74,10 +81,12 @@ def main() -> None:
         # --diag-every K the trace holds zeros on off-steps
         counts = {f"{sc.name}/count": int(buf.count())
                   for sc, buf in zip(cfg.species, final.species)}
+        balance = {}
     else:
         mesh = make_debug_mesh(data=args.domains, model=1)
-        ecfg = engine.EngineConfig(pic=cfg, axis_names=("data",),
-                                   max_migration=8192, async_n=args.async_n)
+        ecfg = make_engine_config(cfg, max_migration=8192,
+                                  async_n=args.async_n,
+                                  rebalance_every=args.rebalance_every)
         state = engine.init_engine_state(ecfg, mesh, 0)
         step = engine.make_engine_step(ecfg, mesh)
         for _ in range(args.steps):
@@ -85,11 +94,16 @@ def main() -> None:
         jax.block_until_ready(state.species[0].x)
         counts = {k: int(np.asarray(v)) for k, v in diag.items()
                   if k.endswith("/count")}
+        balance = {k: np.asarray(v).tolist() for k, v in diag.items()
+                   if k.endswith(("/queue_occ", "/queue_skew"))}
     wall = time.perf_counter() - t0
     print(f"{args.steps} steps, {args.domains} domain(s), "
-          f"async_n={args.async_n}, strategy={args.strategy}: {wall:.2f}s "
+          f"async_n={args.async_n}, rebalance_every={args.rebalance_every}, "
+          f"strategy={args.strategy}: {wall:.2f}s "
           f"({wall / args.steps * 1e3:.1f} ms/step)")
     print("final populations:", counts)
+    if balance:
+        print("queue balance:", balance)
 
     if args.phases:
         if mesh is None:

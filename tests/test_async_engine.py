@@ -47,11 +47,13 @@ def _cfg(nc=256, *, field_solve=True, boundary="periodic", strategy="fused",
                          strategy=strategy)
 
 
-def _run(cfg, d, async_n, steps, *, max_migration=1024, seed=0):
+def _run(cfg, d, async_n, steps, *, max_migration=1024, seed=0,
+         rebalance_every=0):
     """Run the engine; returns (final diag, accumulated sums)."""
     mesh = make_debug_mesh(data=d, model=1)
     ecfg = engine.EngineConfig(pic=cfg, axis_names=("data",),
-                               async_n=async_n, max_migration=max_migration)
+                               async_n=async_n, max_migration=max_migration,
+                               rebalance_every=rebalance_every)
     state = engine.init_engine_state(ecfg, mesh, seed)
     step = engine.make_engine_step(ecfg, mesh)
     sums = {}
@@ -62,7 +64,9 @@ def _run(cfg, d, async_n, steps, *, max_migration=1024, seed=0):
                            "migrated_left", "migrated_right",
                            "wall_absorbed")):
                 sums[k] = sums.get(k, 0) + int(np.asarray(diag[k]))
-    return {k: float(np.asarray(v)) for k, v in diag.items()}, sums
+    out = {k: (float(np.asarray(v)) if np.asarray(v).ndim == 0
+               else np.asarray(v)) for k, v in diag.items()}
+    return out, sums
 
 
 # ---------------------------------------------------------------- in-process
@@ -102,6 +106,9 @@ def test_engine_matches_single_domain_reference():
         species=tuple(jax.tree.map(lambda a: a[None], b)
                       for b in state0.species),
         key=state0.key[None], step=state0.step, rho=state0.rho[None])
+    # externally built PICState: the engine wraps it (free-slot rings from
+    # the alive masks, no in-flight arrivals)
+    est = engine.attach_engine_state(ecfg, mesh, est)
     step = engine.make_engine_step(ecfg, mesh)
     for _ in range(15):
         est, diag = step(est)
@@ -126,22 +133,26 @@ def test_async_n_must_divide_budget_and_capacity():
 
 
 def check_domain_parity():
-    """D in {1, 2, 4} x async_n in {1, 4}: particle count and total charge
-    must match the synchronous D=1 reference EXACTLY (conservation);
-    kinetic energy statistically (domains draw independent samples)."""
+    """D in {1, 2, 4} x async_n in {1, 2, 4}, with and without queue
+    rebalancing: particle count and total charge must match the synchronous
+    D=1 reference EXACTLY (conservation — including across rebalance_every
+    boundaries); kinetic energy statistically (domains draw independent
+    samples)."""
     cfg = _cfg()
     ref, ref_sums = _run(cfg, 1, 1, 20)
-    for d, an in [(2, 1), (2, 2), (4, 1), (4, 4)]:
-        diag, sums = _run(cfg, d, an, 20)
+    for d, an, reb in [(2, 1, 0), (2, 2, 0), (4, 1, 0), (4, 4, 0),
+                       (1, 2, 3), (2, 2, 3), (4, 4, 3)]:
+        diag, sums = _run(cfg, d, an, 20, rebalance_every=reb)
         for sc in cfg.species:
             assert diag[f"{sc.name}/count"] == ref[f"{sc.name}/count"], (
-                d, an, sc.name)
+                d, an, reb, sc.name)
             assert diag[f"{sc.name}/charge"] == ref[f"{sc.name}/charge"], (
-                d, an, sc.name)
+                d, an, reb, sc.name)
             np.testing.assert_allclose(
                 diag[f"{sc.name}/ke"], ref[f"{sc.name}/ke"], rtol=0.15)
             assert sums[f"{sc.name}/migration_overflow"] == 0
             assert sums[f"{sc.name}/merge_dropped"] == 0
+            assert diag[f"{sc.name}/queue_occ"].shape == (an,)
         assert sums["e/migrated_left"] + sums["e/migrated_right"] > 0
 
 
@@ -162,15 +173,18 @@ def check_async_queue_parity():
 
 def check_absorb_conservation():
     """Global absorbing walls: every particle is either still alive or was
-    absorbed at a wall — the engine loses nothing in between."""
+    absorbed at a wall — the engine loses nothing in between. Absorption is
+    the heaviest free-slot churn the ring sees, so run it both with and
+    without periodic queue rebalancing."""
     cfg = _cfg(boundary="absorb", field_solve=False, strategy="unified")
-    diag, sums = _run(cfg, 4, 2, 25)
-    for sc in cfg.species:
-        n0 = sc.n_init
-        assert (int(diag[f"{sc.name}/count"])
-                + sums[f"{sc.name}/wall_absorbed"] == n0), sc.name
-        assert sums[f"{sc.name}/merge_dropped"] == 0
-    assert sums["e/wall_absorbed"] > 0           # walls actually active
+    for reb in (0, 4):
+        diag, sums = _run(cfg, 4, 2, 25, rebalance_every=reb)
+        for sc in cfg.species:
+            n0 = sc.n_init
+            assert (int(diag[f"{sc.name}/count"])
+                    + sums[f"{sc.name}/wall_absorbed"] == n0), (reb, sc.name)
+            assert sums[f"{sc.name}/merge_dropped"] == 0
+        assert sums["e/wall_absorbed"] > 0       # walls actually active
 
 
 def _collect_collectives(jxp, out):
