@@ -11,16 +11,31 @@ the machine-readable ``BENCH_scaling.json`` (the container exposes two
 physical cores, so this measures harness overhead/correctness, not parallel
 speedup — the JSON records the environment so the numbers are never
 mistaken for the paper's).
+
+Two scenarios:
+
+* ``transport`` — migration + halo field solve, no MC sources (the pure
+  queue-pipeline workload);
+* ``ionization`` — the paper's §3.3 BIT1 test: MC ionization on the queue
+  pipeline through the free-slot ring, field solve off (as the paper's
+  test runs it). This is the MC-source workload the ring-aware merge
+  exists for.
+
+    PYTHONPATH=src python -m benchmarks.bench_scaling [--smoke] \
+        [--scenario transport|ionization|both]
 """
 
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import subprocess
 import sys
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+SCENARIOS = ("transport", "ionization")
 
 _PROG = """
 import json
@@ -32,11 +47,15 @@ import dataclasses
 p = json.loads(%r)
 mesh = make_debug_mesh(data=p["d"], model=1)
 cfg = make_bench_config(nc=p["nc"], n=p["n"], strategy="fused")
-# enable the halo field phase so the 'field' row measures the distributed
-# solve, and drop ionization so the persistent free-slot ring is active
-# (the legacy full-scan merge is the ionization path)
-cfg = dataclasses.replace(cfg, field_solve=True, ionization=None)
+if p["scenario"] == "transport":
+    # enable the halo field phase so the 'field' row measures the
+    # distributed solve, and drop the MC source to isolate the transport
+    # pipeline (migration + merge through the free-slot ring)
+    cfg = dataclasses.replace(cfg, field_solve=True, ionization=None)
+# 'ionization' keeps the paper's section-3.3 setting: MC ionization on the
+# async queue pipeline (ring-claimed births), field solver disabled
 ecfg = make_engine_config(cfg, max_migration=p["m"], async_n=p["async_n"],
+                          max_births=p["max_births"],
                           rebalance_every=p["rebalance_every"])
 phases = perf.phase_breakdown(ecfg, mesh, iters=p["iters"], warmup=1)
 queues = perf.queue_stats(ecfg, mesh, steps=3)
@@ -45,10 +64,11 @@ print("RESULTJSON " + json.dumps({"phases": phases, "queues": queues}))
 
 
 def _measure(d: int, *, nc: int, n: int, async_n: int, iters: int,
-             max_migration: int, rebalance_every: int) -> dict | None:
+             max_migration: int, rebalance_every: int, scenario: str,
+             max_births: int) -> dict | None:
     params = json.dumps(dict(d=d, nc=nc, n=n, async_n=async_n, iters=iters,
-                             m=max_migration,
-                             rebalance_every=rebalance_every))
+                             m=max_migration, rebalance_every=rebalance_every,
+                             scenario=scenario, max_births=max_births))
     env = dict(os.environ)
     env["PYTHONPATH"] = SRC
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={d}"
@@ -61,17 +81,21 @@ def _measure(d: int, *, nc: int, n: int, async_n: int, iters: int,
     return None
 
 
-def run(domains=(1, 2, 4, 8), *, nc: int = 4096, n: int = 131_072,
-        async_n: int = 2, iters: int = 5, max_migration: int = 8192,
-        rebalance_every: int = 0, json_path: str = "BENCH_scaling.json",
-        mode: str = "full") -> list[str]:
+def sweep(domains=(1, 2, 4, 8), *, nc: int = 4096, n: int = 131_072,
+          async_n: int = 2, iters: int = 5, max_migration: int = 8192,
+          rebalance_every: int = 0, scenario: str = "transport",
+          max_births: int = 8192) -> tuple[list[str], dict]:
+    """One scenario's domain sweep. Returns (CSV rows, scenario payload)."""
     from repro.distributed import perf
 
+    if scenario not in SCENARIOS:
+        raise ValueError(f"scenario must be one of {SCENARIOS}")
     per_domain, per_domain_queues = {}, {}
     for d in domains:
         res = _measure(d, nc=nc, n=n, async_n=async_n, iters=iters,
                        max_migration=max_migration,
-                       rebalance_every=rebalance_every)
+                       rebalance_every=rebalance_every, scenario=scenario,
+                       max_births=max_births)
         if res is not None:
             per_domain[d] = res["phases"]
             per_domain_queues[d] = res["queues"]
@@ -79,37 +103,59 @@ def run(domains=(1, 2, 4, 8), *, nc: int = 4096, n: int = 131_072,
         # every subprocess died: surface it instead of exiting 0 with no JSON
         raise RuntimeError(
             f"engine scaling bench produced no results for domains={domains}"
-            f" (see stderr above for per-domain failures)")
-    rows = []
+            f" scenario={scenario} (see stderr above for failures)")
     metrics = perf.scaling_metrics(per_domain)
     payload = {
-        "mode": mode,
         "async_n": async_n,
         "rebalance_every": rebalance_every,
         "config": {"nc": nc, "n_per_species": n, "iters": iters,
-                   "max_migration": max_migration},
-        "environment": "emulated host devices, 2-core CPU container "
-                       "(harness overhead, not hardware scaling)",
+                   "max_migration": max_migration,
+                   "max_births": max_births},
         "domains": {
             str(d): {**metrics[d], "queues": per_domain_queues[d]}
             for d in metrics},
     }
-    perf.write_scaling_json(json_path, payload)
+    rows = []
     for d in sorted(metrics):
         m = metrics[d]
         rows.append(
-            f"engine_step/domains={d};async_n={async_n},"
+            f"engine_step/{scenario};domains={d};async_n={async_n},"
             f"{m['phases']['total']:.1f},"
             f"speedup={m['speedup']:.2f};pe="
             f"{m['parallel_efficiency']:.2f}")
+    return rows, payload
+
+
+def run(domains=(1, 2, 4, 8), *, json_path: str = "BENCH_scaling.json",
+        mode: str = "full", scenario: str = "both", **kw) -> list[str]:
+    """Run the requested scenario sweep(s) and write one JSON artifact."""
+    from repro.distributed import perf
+
+    names = SCENARIOS if scenario == "both" else (scenario,)
+    rows, scenarios = [], {}
+    for name in names:
+        r, payload = sweep(domains, scenario=name, **kw)
+        rows += r
+        scenarios[name] = payload
+    perf.write_scaling_json(json_path, {
+        "mode": mode,
+        "environment": "emulated host devices, 2-core CPU container "
+                       "(harness overhead, not hardware scaling)",
+        "scenarios": scenarios,
+    })
     return rows
 
 
-def smoke(json_path: str = "BENCH_scaling.json") -> list[str]:
+def smoke(json_path: str = "BENCH_scaling.json",
+          scenario: str = "both") -> list[str]:
     """CI-sized scaling sweep at the acceptance point: small grid,
-    D in {1, 2, 4}, async_n=4, 2 iters."""
+    D in {1, 2, 4}, async_n=4, 2 iters — by default both the transport
+    scenario and the §3.3 MC-ionization scenario (the ring-routed source
+    workload). The single definition of the CI smoke point: the CLI
+    ``--smoke`` flag and ``benchmarks.run --smoke`` both land here."""
     return run((1, 2, 4), nc=512, n=16_384, async_n=4, iters=2,
-               max_migration=2048, json_path=json_path, mode="smoke")
+               max_migration=2048, max_births=2048, json_path=json_path,
+               mode="smoke", scenario=scenario)
 
 
 def main() -> list[str]:
@@ -117,4 +163,15 @@ def main() -> list[str]:
 
 
 if __name__ == "__main__":
-    print("\n".join(main()))
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized sweep (D in {1,2,4}, both scenarios)")
+    ap.add_argument("--scenario", default="both",
+                    choices=SCENARIOS + ("both",))
+    ap.add_argument("--json", default="BENCH_scaling.json")
+    args = ap.parse_args()
+    if args.smoke:
+        out = smoke(args.json, args.scenario)
+    else:
+        out = run(json_path=args.json, scenario=args.scenario)
+    print("\n".join(out))

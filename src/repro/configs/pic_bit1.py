@@ -14,6 +14,8 @@ over the initial load for ionization-born electrons/ions.
 
 from __future__ import annotations
 
+import dataclasses
+
 from repro.core import pic
 
 NC_GLOBAL = 102_400            # ~100K cells
@@ -70,19 +72,37 @@ def make_bench_config(nc: int = 4096, n: int = 262_144,
     )
 
 
+def make_see_config(nc: int = 4096, n: int = 262_144,
+                    strategy: str = "unified", emission_yield: float = 0.5,
+                    diag_every: int = 1) -> pic.PICConfig:
+    """Bounded-plasma variant: absorbing walls + secondary electron
+    emission (electrons re-emit electrons — BIT1's signature plasma-wall
+    source) on top of the ionization scenario. Runs single-domain or on
+    the async engine (the SEE injector shares the free-slot ring path)."""
+    cfg = make_bench_config(nc=nc, n=n, strategy=strategy,
+                            diag_every=diag_every)
+    return dataclasses.replace(
+        cfg, boundary="absorb", wall_emission=((0, 0),),
+        emission_yield=emission_yield, emission_vth=0.5)
+
+
 def make_engine_config(pic_cfg: pic.PICConfig | None = None, *,
                        async_n: int = 1, max_migration: int = 8192,
-                       rebalance_every: int = 0,
+                       rebalance_every: int = 0, rebalance_skew: int = 0,
+                       max_births: int = 8192, use_ring: bool = True,
                        axis_names: tuple[str, ...] = ("data",),
                        **bench_kw):
     """EngineConfig for the asynchronous multi-device engine, centralizing
     the queue-schedule knobs the launcher and benchmarks share.
 
     ``async_n`` is the paper's async(n) queue count, ``max_migration`` the
-    per-species/direction/step send budget, ``rebalance_every`` the
-    queue-adaptive re-split period (0 = off). With no ``pic_cfg`` the
-    CPU-scale bench config is built from ``bench_kw``
-    (see ``make_bench_config``).
+    per-species/direction/step send budget, ``max_births`` the analogous
+    per-step ionization birth budget, ``rebalance_every`` the queue-adaptive
+    re-split period (0 = off) and ``rebalance_skew`` the occupancy-skew
+    threshold that additionally triggers the re-split (0 = off).
+    ``use_ring=False`` selects the legacy full-capacity-scan merge (parity/
+    debug only). With no ``pic_cfg`` the CPU-scale bench config is built
+    from ``bench_kw`` (see ``make_bench_config``).
     """
     from repro.distributed import engine  # deferred: keep configs light
 
@@ -90,4 +110,6 @@ def make_engine_config(pic_cfg: pic.PICConfig | None = None, *,
         pic_cfg = make_bench_config(**bench_kw)
     return engine.EngineConfig(
         pic=pic_cfg, axis_names=axis_names, async_n=async_n,
-        max_migration=max_migration, rebalance_every=rebalance_every)
+        max_migration=max_migration, max_births=max_births,
+        rebalance_every=rebalance_every, rebalance_skew=rebalance_skew,
+        use_ring=use_ring)

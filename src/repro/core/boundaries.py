@@ -12,6 +12,12 @@ yield (Poisson-thinned, yield <= 1 per primary here), at the wall position,
 with a half-Maxwellian velocity directed into the domain at the emission
 temperature. Sputtering uses the same machinery with the sputtered species'
 buffer and its own yield/temperature.
+
+The candidate sampler (``emission_candidates``) is shared by the
+single-domain cycle (full-length wall masks from the mover's ``PushResult``)
+and the distributed engine (packed absorbed rows of a migration pack), so
+the two paths draw identical physics; only the injection differs —
+``inject_masked`` full scan here, pre-claimed ``FreeSlotRing`` slots there.
 """
 
 from __future__ import annotations
@@ -21,7 +27,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.particles import SpeciesBuffer, inject
+from repro.core.particles import SpeciesBuffer, inject_masked
 
 Array = jax.Array
 
@@ -32,18 +38,24 @@ class EmissionParams(NamedTuple):
     weight: float = 1.0
 
 
-def wall_emission(key: Array, absorbed: SpeciesBuffer, hit_left: Array,
-                  hit_right: Array, target: SpeciesBuffer,
-                  params: EmissionParams, length: float
-                  ) -> tuple[SpeciesBuffer, dict]:
-    """Re-emit secondaries into `target` for each absorbed primary.
+class EmissionRows(NamedTuple):
+    """Emission candidates over one set of hit masks; ``ok`` marks the
+    secondaries that actually landed (what a carried rho must deposit)."""
 
-    hit_left / hit_right are the wall masks the mover reports in its
-    ``PushResult`` (one push per species per step — the masks ARE the record
-    of who was absorbed). `absorbed` is the primary species' buffer over the
-    same slots; only its shapes/dtypes are read (emission position is the
-    wall itself, velocity is resampled half-Maxwellian), so the post-push,
-    post-kill buffer is fine.
+    x: Array       # (M,)
+    v: Array       # (M, 3)
+    w: Array       # (M,)
+    ok: Array      # (M,) bool
+
+
+def emission_candidates(key: Array, hit_left: Array, hit_right: Array,
+                        params: EmissionParams, length: float, dtype
+                        ) -> tuple[Array, Array, Array, Array]:
+    """Sample SEE candidates from wall-hit masks (any shape (M,)).
+
+    Returns (emit mask, x, v, w): a secondary per yield-thinned absorbed
+    primary, at the wall it hit, with a half-Maxwellian velocity directed
+    into the domain. Positions/velocities are valid only where ``emit``.
     """
     ku, kv = jax.random.split(key)
     hit = hit_left | hit_right
@@ -51,17 +63,34 @@ def wall_emission(key: Array, absorbed: SpeciesBuffer, hit_left: Array,
     emit = hit & (u < params.yield_)
 
     # half-Maxwellian into the domain: |v_x| signed away from the wall
-    v = params.vth_emit * jax.random.normal(kv, absorbed.v.shape,
-                                            absorbed.v.dtype)
+    v = params.vth_emit * jax.random.normal(kv, hit.shape + (3,), dtype)
     vx = jnp.abs(v[:, 0])
     v = v.at[:, 0].set(jnp.where(hit_left, vx, -vx))
-    eps = jnp.asarray(length, absorbed.x.dtype) * 1e-6
-    x = jnp.where(hit_left, eps, length - eps)
-    w = jnp.full_like(absorbed.w, params.weight)
+    eps = jnp.asarray(length, dtype) * 1e-6
+    x = jnp.where(hit_left, eps, length - eps).astype(dtype)
+    w = jnp.full(hit.shape, params.weight, dtype)
+    return emit, x, v, w
 
-    target, dropped = inject(target, x, v, w, emit)
+
+def wall_emission(key: Array, absorbed: SpeciesBuffer, hit_left: Array,
+                  hit_right: Array, target: SpeciesBuffer,
+                  params: EmissionParams, length: float
+                  ) -> tuple[SpeciesBuffer, dict, EmissionRows]:
+    """Re-emit secondaries into `target` for each absorbed primary.
+
+    hit_left / hit_right are the wall masks the mover reports in its
+    ``PushResult`` (one push per species per step — the masks ARE the record
+    of who was absorbed). `absorbed` is the primary species' buffer over the
+    same slots; only its dtype is read (emission position is the wall
+    itself, velocity is resampled half-Maxwellian), so the post-push,
+    post-kill buffer is fine. ``emitted`` counts the secondaries that
+    LANDED; candidates refused by a full buffer are ``emission_dropped``.
+    """
+    emit, x, v, w = emission_candidates(key, hit_left, hit_right, params,
+                                        length, absorbed.x.dtype)
+    target, dropped, ok = inject_masked(target, x, v, w, emit)
     diag = {
-        "emitted": jnp.sum(emit.astype(jnp.int32)),
+        "emitted": jnp.sum(ok.astype(jnp.int32)),
         "emission_dropped": dropped,
     }
-    return target, diag
+    return target, diag, EmissionRows(x=x, v=v, w=w, ok=ok)

@@ -10,6 +10,20 @@ An ionized neutral dies and spawns an (e-, D+) pair at the same position:
 the ion inherits the neutral velocity (charge exchange of momentum), the
 electron samples a Maxwellian at the ionization temperature.
 
+Two injection forms share ONE event draw (``ionization_events``), so the
+physics cannot diverge between them:
+
+* ``ionize`` — the single-domain full-buffer path: births go through the
+  ``inject_masked`` free-slot scan, clamped so a pair is born only when
+  BOTH the electron and the ion have a free slot (a refused neutral
+  survives and retries next step, reported via ``birth_overflow`` —
+  never silently dropped);
+* ``ionize_packed`` — the distributed engine's per-queue path: kills and
+  births are reported as packed slot indices + counts (a ``BirthPack``)
+  under a fixed per-queue ``budget``, so the engine can push the freed
+  neutral slots into its ``FreeSlotRing`` and pop pre-claimed
+  electron/ion slots with no full-capacity scan.
+
 Elastic e-n scattering (substrate): P = 1 - exp(-n_n R_el dt); the electron
 velocity is rotated to a uniformly random direction, preserving speed.
 """
@@ -22,7 +36,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.grid import Grid1D, deposit_density, gather
-from repro.core.particles import SpeciesBuffer, inject, kill
+from repro.core.particles import SpeciesBuffer, inject_masked, kill, take
 
 Array = jax.Array
 
@@ -32,32 +46,119 @@ class IonizationParams(NamedTuple):
     vth_electron: float  # thermal speed of spawned electrons
 
 
+class IonizationBirths(NamedTuple):
+    """Full-length birth candidates of one ``ionize`` call (``ok`` marks the
+    pairs that actually landed). The fused carried-rho cycle deposits these
+    into ``PICState.rho`` so the in-pass deposit stays exact with MC
+    sources active."""
+
+    x: Array           # (cap,) birth position (the neutral's)
+    v_electron: Array  # (cap, 3)
+    v_ion: Array       # (cap, 3)
+    w: Array           # (cap,)
+    ok: Array          # (cap,) bool — pair actually born
+
+
+class BirthPack(NamedTuple):
+    """Packed ionization kills/births of one queue (fixed ``budget`` rows).
+
+    ``slot`` are the queue-local indices of the neutrals that won a budget
+    row (``ok``); the caller decides which of those actually die (ring
+    availability) and feeds the freed slots to ``ring_push``. ``n_events``
+    counts every MC hit before the clamp; hits beyond the budget survive
+    and retry next step (``n_events - sum(ok)`` of them)."""
+
+    slot: Array        # (B,) int32 queue-local neutral slot, cap sentinel
+    ok: Array          # (B,) bool — row holds a real event
+    x: Array           # (B,)
+    v_electron: Array  # (B, 3)
+    v_ion: Array       # (B, 3)
+    w: Array           # (B,)
+    n_events: Array    # () int32 MC hits before the budget clamp
+
+
+def ionization_events(key: Array, x: Array, alive: Array, ne_at: Array,
+                      params: IonizationParams, dt: float
+                      ) -> tuple[Array, Array]:
+    """The shared MC event draw: which neutrals ionize, and the spawned
+    electrons' Maxwellian velocities. Both injection forms sample through
+    here. Returns (hit mask, v_electron (..., 3))."""
+    ku, kv = jax.random.split(key)
+    p = 1.0 - jnp.exp(-ne_at * params.rate * dt)
+    u = jax.random.uniform(ku, x.shape, x.dtype)
+    hit = alive & (u < p)
+    ve = params.vth_electron * jax.random.normal(kv, x.shape + (3,), x.dtype)
+    return hit, ve
+
+
 def ionize(key: Array, neutrals: SpeciesBuffer, electrons: SpeciesBuffer,
            ions: SpeciesBuffer, grid: Grid1D, params: IonizationParams,
            dt: float, ne: Array | None = None,
-           ) -> tuple[SpeciesBuffer, SpeciesBuffer, SpeciesBuffer, dict]:
-    """One MC ionization step. Returns (neutrals, electrons, ions, diag)."""
+           ) -> tuple[SpeciesBuffer, SpeciesBuffer, SpeciesBuffer, dict,
+                      IonizationBirths]:
+    """One MC ionization step (full-buffer path).
+
+    Returns (neutrals, electrons, ions, diag, births). A pair is born only
+    when BOTH spawned particles have a free slot; otherwise the neutral
+    SURVIVES and retries next step (``birth_overflow`` counts the refusals)
+    — the buffers never lose particles to a full buffer.
+    """
     if ne is None:
         ne = deposit_density(grid, electrons)
-    ku, kv = jax.random.split(key)
-
     ne_at = gather(grid, ne, neutrals.x)
-    p = 1.0 - jnp.exp(-ne_at * params.rate * dt)
-    u = jax.random.uniform(ku, neutrals.x.shape, neutrals.x.dtype)
-    hit = neutrals.alive & (u < p)
+    hit, ve = ionization_events(key, neutrals.x, neutrals.alive, ne_at,
+                                params, dt)
 
-    # spawn: candidates are every neutral slot; mask selects the ionized ones
-    ve = params.vth_electron * jax.random.normal(
-        kv, neutrals.v.shape, neutrals.v.dtype)
-    electrons, dropped_e = inject(electrons, neutrals.x, ve, neutrals.w, hit)
-    ions, dropped_i = inject(ions, neutrals.x, neutrals.v, neutrals.w, hit)
-    neutrals = kill(neutrals, hit)
+    # capacity clamp: the k-th hit is allowed iff both buffers still have a
+    # k-th free slot — inject_masked then cannot drop an allowed birth
+    rank = jnp.cumsum(hit.astype(jnp.int32)) - 1
+    free_e = jnp.sum((~electrons.alive).astype(jnp.int32))
+    free_i = jnp.sum((~ions.alive).astype(jnp.int32))
+    allowed = hit & (rank < jnp.minimum(free_e, free_i))
+
+    electrons, dropped_e, _ = inject_masked(electrons, neutrals.x, ve,
+                                            neutrals.w, allowed)
+    ions, dropped_i, _ = inject_masked(ions, neutrals.x, neutrals.v,
+                                       neutrals.w, allowed)
+    births = IonizationBirths(x=neutrals.x, v_electron=ve, v_ion=neutrals.v,
+                              w=neutrals.w, ok=allowed)
+    neutrals = kill(neutrals, allowed)
 
     diag = {
-        "n_ionized": jnp.sum(hit.astype(jnp.int32)),
-        "ionize_dropped": dropped_e + dropped_i,
+        "n_ionized": jnp.sum(allowed.astype(jnp.int32)),
+        "ionize_dropped": dropped_e + dropped_i,      # structurally zero
+        "birth_overflow": jnp.sum((hit & ~allowed).astype(jnp.int32)),
     }
-    return neutrals, electrons, ions, diag
+    return neutrals, electrons, ions, diag, births
+
+
+def ionize_packed(key: Array, neutrals: SpeciesBuffer, grid: Grid1D,
+                  params: IonizationParams, dt: float, ne: Array,
+                  budget: int) -> BirthPack:
+    """MC ionization with kills/births as packed slots + counts.
+
+    The per-queue form the distributed engine pipelines: events are drawn
+    over the queue slice, the first ``budget`` hits are packed (one
+    queue-sized scan — never a full-capacity one), and hits beyond the
+    budget simply do not ionize this step (they retry, mirroring
+    ``migration_overflow``). Neutrals outside [0, grid.length) — boundary
+    crossers awaiting migration — are excluded; they ionize on their new
+    domain next step. The caller kills the packed slots it accepts
+    (``particles.kill_packed``) and routes the birth rows through its
+    free-slot rings / ``inject_at``.
+    """
+    ne_at = gather(grid, ne, neutrals.x)
+    inside = (neutrals.x >= 0.0) & (neutrals.x < grid.length)
+    hit, ve = ionization_events(key, neutrals.x, neutrals.alive & inside,
+                                ne_at, params, dt)
+    cap = neutrals.capacity
+    idx = jnp.nonzero(hit, size=budget, fill_value=cap)[0].astype(jnp.int32)
+    sub = take(neutrals, idx)                 # alive == row won a budget slot
+    idx_c = jnp.clip(idx, 0, cap - 1)
+    ve_rows = jnp.where(sub.alive[:, None], ve[idx_c], 0.0)
+    return BirthPack(slot=idx, ok=sub.alive, x=sub.x, v_electron=ve_rows,
+                     v_ion=sub.v, w=sub.w,
+                     n_events=jnp.sum(hit.astype(jnp.int32)))
 
 
 def elastic_scatter(key: Array, sp: SpeciesBuffer, target_density: Array,

@@ -161,7 +161,8 @@ def push_explicit(buf: SpeciesBuffer, e: Array, grid: Grid1D, qm: float,
 def push_fused(buf: SpeciesBuffer, e: Array, grid: Grid1D, qm: float,
                dt: float, b: tuple[float, float, float] = (0.0, 0.0, 0.0),
                boundary: Boundary = "periodic", gather_mode: str = "take",
-               deposit_charge: float | None = None) -> PushResult:
+               deposit_charge: float | None = None,
+               rho_carry: Array | None = None) -> PushResult:
     """Single-pass push+deposit (the 'fused' strategy).
 
     When ``deposit_charge`` is given, the POST-push charge density
@@ -169,12 +170,16 @@ def push_fused(buf: SpeciesBuffer, e: Array, grid: Grid1D, qm: float,
     the same pass over the particle arrays as the push itself, so HBM sees
     them once. On TPU this runs as the ``kernels/fused_cycle.py`` Pallas
     kernel; elsewhere as pure jnp with the windowed one-scatter deposit.
+    ``rho_carry`` seeds the deposit accumulator (the Pallas kernel's VMEM
+    accumulator starts from it instead of zeros): callers accumulating a
+    multi-call rho — per-queue engine loops, pre-deposited birth charge —
+    fold it in without a separate add pass.
     """
     if jax.default_backend() == "tpu":
         from repro.kernels import ops
         x, v, alive, hl, hr, w, rho = ops.fused_push_deposit(
-            buf.x, buf.v, buf.alive, buf.w, e, x0=grid.x0, dx=grid.dx,
-            length=grid.length, qm=qm, dt=dt,
+            buf.x, buf.v, buf.alive, buf.w, e, rho_carry, x0=grid.x0,
+            dx=grid.dx, length=grid.length, qm=qm, dt=dt,
             charge=0.0 if deposit_charge is None else deposit_charge,
             b=b, boundary=boundary, deposit=deposit_charge is not None)
         diag = _wall_diag(v, buf.w, hl, hr)
@@ -189,6 +194,8 @@ def push_fused(buf: SpeciesBuffer, e: Array, grid: Grid1D, qm: float,
     rho = None
     if deposit_charge is not None:
         rho = deposit_windowed(grid, x, deposit_charge * w)
+        if rho_carry is not None:
+            rho = rho_carry + rho
     out = dataclasses.replace(buf, x=x, v=v, alive=alive, w=w)
     return PushResult(out, hl, hr, diag, rho)
 
@@ -246,14 +253,18 @@ def push_async_batched(buf: SpeciesBuffer, e: Array, grid: Grid1D, qm: float,
 def push_stacked(st: StackedSpecies, e: Array, grid: Grid1D, qm: Array,
                  dt: Array, b: tuple[float, float, float] = (0.0, 0.0, 0.0),
                  boundary: Boundary = "periodic", gather_mode: str = "take",
-                 charges: Array | None = None
+                 charges: Array | None = None,
+                 rho_carry: Array | None = None
                  ) -> tuple[StackedSpecies, Array, Array, dict, Array | None]:
     """vmap'd Boris push over the species axis of a StackedSpecies.
 
     ``qm`` and ``dt`` are (S,) per-species arrays (q/m and dt*stride). When
     ``charges`` (S,) is given the post-push TOTAL charge density of all
     species is deposited in the same pass (one flattened windowed scatter)
-    and returned as ``rho``; pass None to skip deposition.
+    and returned as ``rho``; pass None to skip deposition. ``rho_carry``
+    seeds the deposit accumulator — the distributed engine threads its
+    per-queue rho through here so the accumulation is part of the fused
+    in-pass deposit rather than a separate add.
 
     Returns (stacked, hit_left (S, cap), hit_right (S, cap),
     diag dict of (S,) arrays, rho | None).
@@ -269,6 +280,8 @@ def push_stacked(st: StackedSpecies, e: Array, grid: Grid1D, qm: Array,
     rho = None
     if charges is not None:
         rho = deposit_stacked(grid, x, w, alive, charges)
+        if rho_carry is not None:
+            rho = rho_carry + rho
     return out, hl, hr, diag, rho
 
 

@@ -292,18 +292,25 @@ def ring_push(ring: FreeSlotRing, idx: Array, ok: Array) -> FreeSlotRing:
                         count=ring.count + jnp.sum(ok.astype(jnp.int32)))
 
 
-def ring_claim(ring: FreeSlotRing, want: Array,
-               sentinel: int) -> tuple[FreeSlotRing, Array, Array]:
+def ring_claim(ring: FreeSlotRing, want: Array, sentinel: int,
+               budget: Array | None = None
+               ) -> tuple[FreeSlotRing, Array, Array]:
     """Pop one slot per ``want`` candidate, in order.
 
     Returns (ring, dest, ok): ``dest`` (M,) holds a pre-claimed dead slot
     where ``ok``, the ``sentinel`` (typically the buffer capacity) where the
     candidate lost — either ``want`` was False or the ring ran dry (the
-    caller reports those as drops). O(M)."""
+    caller reports those as drops). ``budget`` caps the grants below the
+    ring's own count; paired claims on two rings (an ionization birth needs
+    BOTH an electron and an ion slot) pass ``min(count_a, count_b)`` to both
+    so the grant sets coincide and neither ring leaks a slot to a half-born
+    pair. O(M)."""
     r = ring.slots.shape[0]
     want = want.astype(bool)
     rank = jnp.cumsum(want.astype(jnp.int32)) - 1
-    ok = want & (rank < ring.count)
+    avail = (ring.count if budget is None
+             else jnp.minimum(ring.count, budget))
+    ok = want & (rank < avail)
     pos = jnp.mod(ring.head + jnp.clip(rank, 0, r - 1), r)
     dest = jnp.where(ok, ring.slots[pos], sentinel)
     n = jnp.sum(ok.astype(jnp.int32))
@@ -323,6 +330,18 @@ def kill(buf: SpeciesBuffer, mask: Array) -> SpeciesBuffer:
     """Mark ``mask`` particles dead (absorbed at wall, ionized away, ...)."""
     alive = buf.alive & ~mask
     return dataclasses.replace(buf, alive=alive, w=buf.w * alive)
+
+
+def kill_packed(buf: SpeciesBuffer, idx: Array, ok: Array) -> SpeciesBuffer:
+    """Kill the ``ok``-masked packed slot indices ``idx`` (M,).
+
+    The packed mirror of ``inject_at``: MC sources that already hold their
+    victims as packed indices (an ionization pack, a migration pack) kill
+    through here, so the freed indices can feed ``ring_push`` with no
+    additional scan."""
+    gone = jnp.zeros((buf.capacity,), bool).at[
+        jnp.where(ok.astype(bool), idx, buf.capacity)].set(True, mode="drop")
+    return kill(buf, gone)
 
 
 def take(buf: SpeciesBuffer, idx: Array) -> SpeciesBuffer:

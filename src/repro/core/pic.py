@@ -34,6 +34,7 @@ import jax.numpy as jnp
 
 from repro.core import collisions, diagnostics, fields, mover
 from repro.core.grid import Grid1D, deposit, deposit_stacked
+from repro.core.grid import deposit_windowed
 from repro.core.particles import (SpeciesBuffer, init_uniform, stack_species,
                                   unstack_species)
 
@@ -137,12 +138,15 @@ def _stackable(cfg: PICConfig) -> bool:
 
 def _carries_rho(cfg: PICConfig) -> bool:
     """The fused strategy may carry its in-pass deposit to the next field
-    solve only when nothing changes the charge AFTER the push: no ionization
-    birth, no wall emission, no sub-cycled (frozen) species. Otherwise the
-    field phase re-deposits from scratch and stays exact."""
+    solve when every post-push charge change is accounted for. MC sources
+    now are: ionization and wall-emission births are deposited into the
+    carried rho as they land (the engine's arrival-style correction), and
+    an ionized neutral must carry zero charge so its post-deposit death
+    needs no correction. Sub-cycled (frozen) species remain excluded —
+    their in-pass deposit would move charge the freeze puts back."""
     return (cfg.strategy == "fused" and cfg.field_solve
-            and cfg.ionization is None
-            and not (cfg.wall_emission and cfg.boundary == "absorb")
+            and (cfg.ionization is None
+                 or cfg.species[cfg.ionization[0]].charge == 0.0)
             and all(sc.stride == 1 for sc in cfg.species))
 
 
@@ -274,9 +278,14 @@ def step_fn(state: PICState, cfg: PICConfig) -> tuple[PICState, dict]:
         for primary, target in cfg.wall_emission:
             key, sub = jax.random.split(key)
             hl, hr = hits[primary]
-            species[target], d = wall_emission(sub, species[primary], hl, hr,
-                                               species[target], params,
-                                               cfg.length)
+            species[target], d, erows = wall_emission(
+                sub, species[primary], hl, hr, species[target], params,
+                cfg.length)
+            q_t = cfg.species[target].charge
+            if carried and new_rho is not None and q_t != 0.0:
+                # birth charge folds into the carried in-pass deposit
+                new_rho = new_rho + deposit_windowed(
+                    grid, erows.x, q_t * erows.w * erows.ok)
             diag.update({f"{cfg.species[target].name}/{k}": v
                          for k, v in d.items()})
 
@@ -285,9 +294,18 @@ def step_fn(state: PICState, cfg: PICConfig) -> tuple[PICState, dict]:
         key, sub = jax.random.split(key)
         params = collisions.IonizationParams(
             rate=cfg.ionization_rate, vth_electron=cfg.ionization_vth_e)
-        neu, ele, ion, d = collisions.ionize(
+        neu, ele, ion, d, births = collisions.ionize(
             sub, species[ni], species[ei], species[ii], grid, params, cfg.dt)
         species[ni], species[ei], species[ii] = neu, ele, ion
+        if carried and new_rho is not None:
+            # one windowed scatter for both halves of every born pair; the
+            # killed neutral carries no charge (see _carries_rho)
+            q_e = cfg.species[ei].charge
+            q_i = cfg.species[ii].charge
+            bw = births.w * births.ok
+            new_rho = new_rho + deposit_windowed(
+                grid, jnp.stack([births.x, births.x]),
+                jnp.stack([q_e * bw, q_i * bw]))
         diag.update(d)
 
     species = tuple(species)

@@ -20,12 +20,19 @@ async(n) queues        ``EngineConfig.async_n`` interleaved slices of the
                        merge — the data-flow edges ARE the depend clauses
 MPI_Isend/Irecv        ``jax.lax.ppermute`` of fixed-size send packs
 BIT1 linked-list       ``particles.FreeSlotRing`` carried in ``EngineState``:
-free-slot reuse        leavers push their packed slot indices, arrivals pop
-                       pre-claimed slots, the scatter defers to the next
+free-slot reuse        leavers and MC kills push their packed slot indices;
+                       arrivals, ionization pair births (claimed under a
+                       shared min-count budget) and SEE secondaries pop
+                       pre-claimed slots; the scatter defers to the next
                        step's ingest — the merge never scans the buffers
-OpenMP dynamic         ``EngineConfig.rebalance_every``: periodic compact +
-scheduling             interleaved re-split keeps per-queue occupancy even
-                       (``queue_occ`` / ``queue_skew`` diagnostics)
+MC sources (§3.3/SEE)  per-queue ``collisions.ionize_packed`` between push
+                       and exchange (budgeted by ``max_births``); SEE off
+                       the packed absorbed rows (``boundaries``); births
+                       ride ``EngineState.pending``
+OpenMP dynamic         ``EngineConfig.rebalance_every`` (period) and
+scheduling             ``rebalance_skew`` (occupancy-skew trigger): compact
+                       + interleaved re-split keeps per-queue occupancy
+                       even (``queue_occ`` / ``queue_skew`` diagnostics)
 MPI_Allgather (field)  eliminated: ``halo.py`` exchanges edge nodes with
                        ``ppermute`` and distributes the exact double-prefix
                        Poisson solve with scalar-only gathers

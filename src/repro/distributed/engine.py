@@ -18,15 +18,15 @@ queue *k+1* runs the mover. The JAX mapping:
   slots only after every queue of every species group has been pushed.
 
 The per-step phase order matches BIT1's cycle, with one JAX-native addition:
-ingest (scatter last step's arrivals + periodic queue rebalance) -> halo
-field solve (see ``halo.py`` — no full-rho all_gather) -> per-queue fused
-push+deposit -> per-queue migration exchange -> deferred merge -> MC
-collisions -> diagnostics psum.
+ingest (scatter last step's arrivals + births, periodic/skew-triggered queue
+rebalance) -> halo field solve (see ``halo.py`` — no full-rho all_gather) ->
+per-queue fused push+deposit with in-queue MC sources -> per-queue migration
+exchange + SEE -> deferred merge -> diagnostics psum.
 
 Free-slot ring (the merge-phase fix): the seed merge re-discovered dead
 slots with one full-capacity ``free_slots`` scan per species per step, so
 the ``merge`` probe time scaled with TOTAL capacity, not with the arrival
-count. The engine now carries a persistent ``particles.FreeSlotRing`` per
+count. The engine carries a persistent ``particles.FreeSlotRing`` per
 capacity group in its state: migration leavers and wall-absorbed particles
 push their (already-packed, O(max_migration)) slot indices, arrivals pop
 pre-claimed slots, and the scatter itself is **deferred into the next
@@ -36,13 +36,52 @@ bookkeeping plus the carried-rho arrival deposit. In-flight arrivals live
 in ``EngineState.pending`` and are counted by the step diagnostics, so
 conservation is exact at every step boundary.
 
+Monte-Carlo sources ride the same ring (this is what lets the paper's §3.3
+ionization scenario and the SEE plasma-wall source run on the async
+pipeline — no more legacy full-scan demotion):
+
+* **ionization** runs per queue, between that queue's push and its
+  migration exchange: ``collisions.ionize_packed`` draws events over the
+  queue slice and packs at most ``EngineConfig.max_births / async_n`` of
+  them (queue-sized scan only). The freed neutral slots feed the ring
+  exactly like migration leavers; the electron/ion birth rows pop
+  PRE-CLAIMED slots from their species' rings — claimed as a pair under a
+  shared ``min(count_e, count_i)`` budget, so a birth either gets both
+  slots or neither (never a half-born pair, never a leaked slot). Hits
+  beyond the budget or the rings simply do not ionize this step and retry
+  (``birth_overflow``, mirroring ``migration_overflow``).
+* **wall emission (SEE)** consumes the absorbed rows of each queue's
+  migration pack (already packed — no scan): yield-thinned secondaries
+  claim slots from the target species' ring the same way
+  (``emission_overflow`` counts ring-refused candidates).
+
+Both kinds of birth rows join the migration arrivals in
+``EngineState.pending`` and land at the next ingest, so the step
+diagnostics (reduced over pending-flushed effective buffers) conserve
+particle count and charge bitwise at every step boundary. With
+``strategy='fused'`` the birth charge is deposited into the carried rho at
+merge time (the same arrival-style correction migration uses), so the
+carried-rho fast path now covers MC-source runs with the field solve on.
+
+``EngineConfig.use_ring=False`` keeps the legacy full-capacity-scan merge
+as an opt-in debug/parity mode: the SAME MC events (identical keys) are
+injected through ``inject_masked`` scans instead — the conservation suite
+pins the two paths against each other on identical seeds. The parity
+holds while nothing drops: legacy mode retains the pre-PR-4 loss
+semantics at the margins (a full buffer at merge time drops a birth whose
+neutral was already killed, counted by ``merge_dropped``), whereas the
+ring path refuses the kill up front — run the ring path outside of parity
+tests.
+
 Queue-adaptive rebalance: the interleaved split is only even while
 occupancy is; absorption/ionization churn drifts the per-queue alive counts
 apart (per-species ``queue_occ`` / ``queue_skew`` diagnostics expose this).
 ``EngineConfig.rebalance_every = K`` compacts each capacity group (alive
 slots first, stable) every K steps under ``lax.cond`` and rebuilds the ring
-from the compacted counts — the interleaved re-split is then even again for
-every species, bounding the skew between consecutive rebalances.
+from the compacted counts; ``rebalance_skew = T`` additionally triggers the
+same compaction whenever a group's per-queue occupancy skew exceeds T at
+ingest — MC births are the churn rebalancing exists for, so the trigger
+follows the diagnostic instead of only a fixed period.
 
 Migration overflow (fixed in PR 2, vs the seed's ``exchange_species``):
 every boundary crosser used to be killed even when the fixed-size pack
@@ -52,9 +91,10 @@ the rest stay local — clamped just inside the slab so the next gather is
 in-bounds — and retry next step, reported via ``migration_overflow``.
 
 Carried charge (``strategy='fused'``): the in-pass deposit of each queue is
-accumulated into one local rho, corrected by subtracting the leavers' edge
-deposits and adding the accepted arrivals' — so the next step's field solve
-never re-reads the full particle arrays. Charge is conserved exactly.
+threaded through ``mover.push_stacked(rho_carry=...)``, corrected by
+subtracting the leavers' edge deposits and adding the accepted arrivals'
+and births' — so the next step's field solve never re-reads the full
+particle arrays. Charge is conserved exactly.
 """
 
 from __future__ import annotations
@@ -66,12 +106,14 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core import collisions, diagnostics, mover
-from repro.core.grid import Grid1D, deposit_stacked, deposit_windowed
+from repro.core import boundaries, collisions, diagnostics, mover
+from repro.core.grid import (Grid1D, deposit_density, deposit_stacked,
+                             deposit_windowed)
 from repro.core.particles import (FreeSlotRing, SpeciesBuffer, StackedSpecies,
                                   init_uniform, inject_at, inject_masked,
-                                  kill, ring_claim, ring_from_counts,
-                                  ring_init, ring_push, stack_species, take)
+                                  kill, kill_packed, ring_claim,
+                                  ring_from_counts, ring_init, ring_push,
+                                  stack_species, take)
 from repro.core.pic import PICConfig, PICState
 from repro.core.pic import _carries_rho as pic_carries_rho
 from repro.distributed import halo
@@ -91,17 +133,25 @@ class EngineConfig:
     ``async_n`` is the paper's async(n): the number of migration/compute
     queues each domain's particles are split into. ``max_migration`` is the
     per-species/per-direction/per-step send budget for the whole domain,
-    split evenly across queues. ``rebalance_every = K`` re-evens the queue
-    split every K steps (0 disables): each capacity group is compacted
-    (alive first) and the free-slot ring rebuilt, so per-queue occupancy
-    skew stays bounded under absorption/ionization churn.
+    split evenly across queues; ``max_births`` is the analogous per-domain
+    budget for ionization pair births. ``rebalance_every = K`` re-evens the
+    queue split every K steps (0 disables) and ``rebalance_skew = T``
+    triggers the same compaction whenever per-queue occupancy skew exceeds
+    T (0 disables): each capacity group is compacted (alive first) and the
+    free-slot ring rebuilt, so per-queue occupancy skew stays bounded under
+    absorption/ionization churn. ``use_ring=False`` selects the legacy
+    full-capacity-scan merge — a debug/parity mode only (the conservation
+    suite pins it against the ring path on identical seeds).
     """
     pic: PICConfig                       # cfg.nc == GLOBAL cell count
     axis_names: tuple[str, ...] = ("data",)
     async_n: int = 1
     max_migration: int = 2048            # per species/direction/step
     species_capacity_local: int | None = None  # default: global cap / D
-    rebalance_every: int = 0             # 0 = never re-split the queues
+    rebalance_every: int = 0             # 0 = never re-split periodically
+    rebalance_skew: int = 0              # 0 = no skew-triggered re-split
+    max_births: int = 2048               # ionization births per domain/step
+    use_ring: bool = True                # False: legacy full-scan merge
 
     def __post_init__(self):
         object.__setattr__(self, "axis_names", tuple(self.axis_names))
@@ -112,13 +162,18 @@ class EngineConfig:
                 f"async_n ({self.async_n}) must divide max_migration "
                 f"({self.max_migration}) so every queue gets an equal "
                 f"send budget")
+        if (self.pic.ionization is not None
+                and self.max_births % self.async_n != 0):
+            raise ValueError(
+                f"async_n ({self.async_n}) must divide max_births "
+                f"({self.max_births}) so every queue gets an equal "
+                f"birth budget")
         if self.rebalance_every < 0:
             raise ValueError(
                 f"rebalance_every must be >= 0, got {self.rebalance_every}")
-        if self.pic.wall_emission:
+        if self.rebalance_skew < 0:
             raise ValueError(
-                "the distributed engine does not implement the wall-emission"
-                " source yet; run plasma-wall emission single-domain")
+                f"rebalance_skew must be >= 0, got {self.rebalance_skew}")
 
     def num_domains(self, mesh: Mesh) -> int:
         n = 1
@@ -143,25 +198,25 @@ class EngineConfig:
         return self.max_migration // self.async_n
 
     @property
-    def pending_rows(self) -> int:
-        """Arrival rows carried between steps: 2 directions x async_n queues
-        x the per-queue budget = 2 * max_migration, independent of async_n."""
-        return 2 * self.max_migration
+    def queue_births(self) -> int:
+        assert self.max_births % self.async_n == 0  # enforced when it matters
+        return self.max_births // self.async_n
 
 
 @partial(jax.tree_util.register_dataclass,
          data_fields=("x", "v", "w", "alive", "dest"), meta_fields=())
 @dataclasses.dataclass
 class PendingArrivals:
-    """Arrivals received this step, scattered at the NEXT step's ingest.
+    """Rows received/born this step, scattered at the NEXT step's ingest.
 
     Rows are the concatenated per-queue migration packs of one capacity
-    group; ``dest`` holds the pre-claimed dead slot of each accepted row
-    (the local capacity as a drop sentinel otherwise). Because the slots are
-    claimed from the free-slot ring at merge time, the eventual scatter is
+    group, followed by its MC birth blocks (ionization pairs, SEE
+    secondaries); ``dest`` holds the pre-claimed dead slot of each accepted
+    row (the local capacity as a drop sentinel otherwise). Because the
+    slots are claimed from the free-slot ring, the eventual scatter is
     gather-free — and deferring it merges it into the pass that streams the
-    whole buffer anyway. The step diagnostics count pending rows as resident
-    particles, so conservation holds at every step boundary.
+    whole buffer anyway. The step diagnostics count pending rows as
+    resident particles, so conservation holds at every step boundary.
     """
 
     x: Array      # (S, M)
@@ -179,8 +234,8 @@ class EngineState:
 
     ``rings`` / ``pending`` hold one entry per capacity group (matching
     ``_capacity_groups`` order), each batched over the group's species axis.
-    Both are empty tuples when the configuration routes through the legacy
-    full-scan merge (see ``_uses_ring``).
+    Both are empty tuples in the legacy full-scan mode
+    (``EngineConfig.use_ring=False``).
     """
 
     pic: PICState
@@ -206,20 +261,21 @@ class EngineState:
 
 
 def _carries_rho(ecfg: EngineConfig) -> bool:
-    """The carried in-pass deposit is exact only when nothing changes the
-    charge after the migration merge — the single-domain step's rule, reused
-    so the two paths can never diverge (wall emission, the one clause that
-    differs structurally, is rejected by EngineConfig outright)."""
+    """The carried in-pass deposit is exact when every post-push charge
+    change is folded back in — the single-domain step's rule, reused so the
+    two paths can never diverge. MC births (ionization pairs, SEE
+    secondaries) are deposited with the merge-phase arrival correction, and
+    an ionized neutral must carry zero charge (enforced by the shared
+    rule) so its post-deposit death needs none."""
     return pic_carries_rho(ecfg.pic)
 
 
-def _uses_ring(ecfg: EngineConfig) -> bool:
-    """The persistent free-slot ring is exact while the engine's OWN kill /
-    inject sites (migration, wall absorption, the merge) are the only ones
-    touching the alive masks. MC ionization kills neutrals and births
-    electron/ion pairs through its own full-scan injector without telling
-    the ring, so ionization runs keep the legacy full-scan merge."""
-    return ecfg.pic.ionization is None
+def _see_pairs(cfg: PICConfig) -> tuple[tuple[int, int], ...]:
+    """Active (primary, target) wall-emission pairs (absorbing walls only,
+    matching the single-domain cycle's rule)."""
+    if cfg.wall_emission and cfg.boundary == "absorb":
+        return tuple(cfg.wall_emission)
+    return ()
 
 
 def _capacity_groups(ecfg: EngineConfig, mesh: Mesh) -> list[tuple[int, ...]]:
@@ -229,6 +285,30 @@ def _capacity_groups(ecfg: EngineConfig, mesh: Mesh) -> list[tuple[int, ...]]:
     for i, sc in enumerate(ecfg.pic.species):
         by_cap.setdefault(ecfg.local_cap(sc, mesh), []).append(i)
     return [tuple(v) for v in by_cap.values()]
+
+
+def _species_location(groups) -> dict[int, tuple[int, int]]:
+    """species index -> (capacity group, row within the group's stack)."""
+    return {i: (g, j)
+            for g, idxs in enumerate(groups) for j, i in enumerate(idxs)}
+
+
+def _group_pending_rows(ecfg: EngineConfig, groups) -> list[int]:
+    """Static pending-row count per capacity group: 2 directions x the
+    migration budget, plus the group's MC birth blocks (an ionization block
+    per queue lands in the electron's and ion's group — one shared block
+    when they stack together; an SEE block per queue per pair lands in the
+    target's group)."""
+    cfg = ecfg.pic
+    rows = [2 * ecfg.max_migration] * len(groups)
+    loc = _species_location(groups)
+    if cfg.ionization is not None:
+        _, ei, ii = cfg.ionization
+        for g in {loc[ei][0], loc[ii][0]}:
+            rows[g] += ecfg.max_births
+    for _, t in _see_pairs(cfg):
+        rows[loc[t][0]] += 2 * ecfg.max_migration
+    return rows
 
 
 def _split_queues(st: StackedSpecies, n: int) -> list[StackedSpecies]:
@@ -268,14 +348,16 @@ def _exchange_queue(q, l_local: float, m: int, boundary: str,
     """Pack one queue's boundary crossers (vmapped over the species axis).
 
     Returns (kept, pack_l, pack_r, leaver_x, leaver_w, freed_idx, freed_ok,
-    diag): ``pack_l``/``pack_r`` are the fixed-size send buffers (in the
-    receiver's frame); ``leaver_x``/``leaver_w`` cover every particle that
-    left — sent or wall-absorbed — at its raw post-push position, for the
-    carried-rho subtraction; ``freed_idx``/``freed_ok`` are the queue-local
-    slot indices those leavers vacated (already packed, so the free-slot
-    ring is fed without any additional scan). Crossers that exceed the pack
-    or the per-direction budget stay local (clamped, retried next step)
-    instead of being lost.
+    absorbed_l, absorbed_r, diag): ``pack_l``/``pack_r`` are the fixed-size
+    send buffers (in the receiver's frame); ``leaver_x``/``leaver_w`` cover
+    every particle that left — sent or wall-absorbed — at its raw post-push
+    position, for the carried-rho subtraction; ``freed_idx``/``freed_ok``
+    are the queue-local slot indices those leavers vacated (already packed,
+    so the free-slot ring is fed without any additional scan);
+    ``absorbed_l``/``absorbed_r`` mark the packed rows absorbed at the
+    global left/right wall — the SEE source consumes them with no further
+    scan. Crossers that exceed the pack or the per-direction budget stay
+    local (clamped, retried next step) instead of being lost.
     """
 
     def pack_one(x, v, w, alive):
@@ -304,9 +386,12 @@ def _exchange_queue(q, l_local: float, m: int, boundary: str,
         kept = dataclasses.replace(kept, x=jnp.where(stay, x_in, kept.x))
 
         if boundary == "absorb":         # global walls absorb at edge domains
-            absorb = (ok_l & is_first) | (ok_r & is_last)
+            abs_l = ok_l & is_first
+            abs_r = ok_r & is_last
         else:                            # global periodic: the ring wraps
-            absorb = jnp.zeros_like(ok)
+            abs_l = jnp.zeros_like(ok_l)
+            abs_r = jnp.zeros_like(ok_r)
+        absorb = abs_l | abs_r
         send_l = ok_l & ~absorb
         send_r = ok_r & ~absorb
         idx_l = jnp.nonzero(send_l, size=m, fill_value=2 * m)[0]
@@ -322,15 +407,16 @@ def _exchange_queue(q, l_local: float, m: int, boundary: str,
             "migration_overflow": jnp.sum(stay.astype(jnp.int32)),
             "wall_absorbed": jnp.sum(absorb.astype(jnp.int32)),
         }
-        return kept, pack_l, pack_r, packed.x, packed.w * ok, idx, ok, diag
+        return (kept, pack_l, pack_r, packed.x, packed.w * ok, idx, ok,
+                abs_l, abs_r, diag)
 
     return jax.vmap(pack_one)(q.x, q.v, q.w, q.alive)
 
 
 def _inject_rows(full: SpeciesBuffer, cand: SpeciesBuffer):
     """vmapped full-scan inject of (S, ncand) candidates into (S, cap)
-    buffers — the legacy merge used when the free-slot ring is unavailable
-    (``_uses_ring`` False)."""
+    buffers — the legacy merge used in the opt-in parity mode
+    (``use_ring=False``)."""
 
     def one(bx, bv, bw, ba, cx, cv, cw, ca):
         return inject_masked(SpeciesBuffer(x=bx, v=bv, w=bw, alive=ba),
@@ -362,6 +448,64 @@ def _empty_pending(s: int, m: int, cap: int, dtype) -> PendingArrivals:
         dest=jnp.full((s, m), cap, jnp.int32))
 
 
+def _birth_block(s: int, nb: int, cap: int, dtype,
+                 rows: dict) -> PendingArrivals:
+    """One (S, nb) pending block whose live rows are MC births.
+
+    ``rows`` maps a species row j to its (x, v, w, ok, dest) candidate
+    arrays — an ionization block carries the electron AND ion rows of the
+    same events when the two species share a capacity group; every other
+    row stays dead. ``dest=None`` (legacy full-scan mode) leaves the drop
+    sentinel, which ``_inject_rows`` never reads."""
+    bx = jnp.zeros((s, nb), dtype)
+    bv = jnp.zeros((s, nb, 3), dtype)
+    bw = jnp.zeros((s, nb), dtype)
+    ba = jnp.zeros((s, nb), bool)
+    bd = jnp.full((s, nb), cap, jnp.int32)
+    for j, (x, v, w, ok, dest) in rows.items():
+        ok = ok.astype(bool)
+        bx = bx.at[j].set(x)
+        bv = bv.at[j].set(v)
+        bw = bw.at[j].set(w * ok)
+        ba = ba.at[j].set(ok)
+        if dest is not None:
+            bd = bd.at[j].set(dest.astype(jnp.int32))
+    return PendingArrivals(x=bx, v=bv, w=bw, alive=ba, dest=bd)
+
+
+def _claim_rows(ring: FreeSlotRing, want_rows: dict, cap: int,
+                budget: Array | None = None):
+    """Claim slots from a group-batched ring for the given species rows.
+
+    ``want_rows`` maps row j -> (M,) want mask; other rows claim nothing.
+    ``budget`` (scalar) caps every row's grants — paired ionization claims
+    pass ``min(count_e, count_i)`` so both rows grant the same set.
+    Returns (ring, dest (S, M), ok (S, M))."""
+    s = ring.count.shape[0]
+    m = next(iter(want_rows.values())).shape[0]
+    want = jnp.zeros((s, m), bool)
+    for j, wv in want_rows.items():
+        want = want.at[j].set(wv.astype(bool))
+    if budget is None:
+        return jax.vmap(lambda rg, wv: ring_claim(rg, wv, cap))(ring, want)
+    bud = jnp.broadcast_to(budget, (s,))
+    return jax.vmap(lambda rg, wv, bd: ring_claim(rg, wv, cap, bd))(
+        ring, want, bud)
+
+
+def _push_rows(ring: FreeSlotRing, idx_rows: dict, m: int) -> FreeSlotRing:
+    """Push freed slots into a group-batched ring for the given species
+    rows. ``idx_rows`` maps row j -> (idx (M,), ok (M,)); other rows push
+    nothing."""
+    s = ring.count.shape[0]
+    idx = jnp.zeros((s, m), jnp.int32)
+    okm = jnp.zeros((s, m), bool)
+    for j, (iv, ov) in idx_rows.items():
+        idx = idx.at[j].set(iv.astype(jnp.int32))
+        okm = okm.at[j].set(ov.astype(bool))
+    return jax.vmap(ring_push)(ring, idx, okm)
+
+
 def _compact_group(st: StackedSpecies) -> tuple[StackedSpecies, Array]:
     """Stable per-species compaction (alive first): the interleaved queue
     split of the result is occupancy-even by construction. Returns the
@@ -384,7 +528,7 @@ def _state_specs(ecfg: EngineConfig, mesh: Mesh) -> EngineState:
             SpeciesBuffer(x=part, v=part, w=part, alive=part)
             for _ in ecfg.pic.species),
         key=part, step=P(), rho=part if carried else None)
-    if not _uses_ring(ecfg):
+    if not ecfg.use_ring:
         return EngineState(pic=pic, rings=(), pending=())
     groups = _capacity_groups(ecfg, mesh)
     rings = tuple(FreeSlotRing(slots=part, head=part, count=part)
@@ -425,12 +569,19 @@ def make_engine_step(ecfg: EngineConfig, mesh: Mesh, *, upto: str = "full",
     d = ecfg.num_domains(mesh)
     n_q = ecfg.async_n
     m_q = ecfg.queue_migration
+    b_q = ecfg.queue_births if cfg.ionization is not None else 0
     carried = _carries_rho(ecfg)
-    use_ring = _uses_ring(ecfg)
+    use_ring = ecfg.use_ring
     reb_k = ecfg.rebalance_every
+    skew_k = ecfg.rebalance_skew
     groups = _capacity_groups(ecfg, mesh)
+    loc = _species_location(groups)
+    prows = _group_pending_rows(ecfg, groups)
     group_caps = [ecfg.local_cap(cfg.species[idxs[0]], mesh)
                   for idxs in groups]
+    ion = cfg.ionization
+    see_pairs = _see_pairs(cfg)
+    has_mc = ion is not None or bool(see_pairs)
     for i, sc in enumerate(cfg.species):
         cap_l = ecfg.local_cap(sc, mesh)
         if cap_l % n_q != 0:
@@ -469,21 +620,28 @@ def make_engine_step(ecfg: EngineConfig, mesh: Mesh, *, upto: str = "full",
                 rings=tuple(_lift_tree(rg) for rg in rings),
                 pending=tuple(_lift_tree(p) for p in pend_out))
 
-        # ---- ingest: land last step's arrivals in their pre-claimed slots
-        #      (the scatter deferred out of the merge phase), then — every
-        #      rebalance_every steps — compact and re-split the queues ----
-        rebalance_now = None
+        # ---- ingest: land last step's arrivals + births in their
+        #      pre-claimed slots (the scatter deferred out of the merge
+        #      phase), then compact + re-split the queues — every
+        #      rebalance_every steps, or whenever the post-flush per-queue
+        #      occupancy skew exceeds rebalance_skew ----
+        rebalance_periodic = None
         if reb_k > 0:
-            rebalance_now = (state.step > 0) & (state.step % reb_k == 0)
+            rebalance_periodic = (state.step > 0) & (state.step % reb_k == 0)
         for g, idxs in enumerate(groups):
             cap_g = group_caps[g]
-            touched = use_ring or reb_k > 0
-            if not touched:
+            if not (use_ring or reb_k > 0 or skew_k > 0):
                 continue
             st = stack_species([species[i] for i in idxs])
             if use_ring:
                 st = _flush_pending(st, pend_in[g])
-            if reb_k > 0:
+            reb_g = rebalance_periodic
+            if skew_k > 0:
+                occ = jax.vmap(lambda a: _queue_occupancy(a, n_q))(st.alive)
+                skew = jnp.max(jnp.max(occ, axis=1) - jnp.min(occ, axis=1))
+                trig = (state.step > 0) & (skew > skew_k)
+                reb_g = trig if reb_g is None else (reb_g | trig)
+            if reb_g is not None:
                 if use_ring:
                     def reb(op):
                         new, counts = _compact_group(op[0])
@@ -491,14 +649,14 @@ def make_engine_step(ecfg: EngineConfig, mesh: Mesh, *, upto: str = "full",
                             lambda c: ring_from_counts(c, cap_g))(counts)
 
                     st, rings[g] = jax.lax.cond(
-                        rebalance_now, reb, lambda op: op, (st, rings[g]))
+                        reb_g, reb, lambda op: op, (st, rings[g]))
                 else:
                     st = jax.lax.cond(
-                        rebalance_now, lambda s: _compact_group(s)[0],
+                        reb_g, lambda s: _compact_group(s)[0],
                         lambda s: s, st)
             write_back(idxs, st)
         empty_pend = [
-            _empty_pending(len(idxs), ecfg.pending_rows, group_caps[g],
+            _empty_pending(len(idxs), prows[g], group_caps[g],
                            species[idxs[0]].x.dtype)
             for g, idxs in enumerate(groups)] if use_ring else []
         if upto == "ingest":
@@ -529,24 +687,54 @@ def make_engine_step(ecfg: EngineConfig, mesh: Mesh, *, upto: str = "full",
         diag: dict = {}
 
         def dacc(name, k, v):
-            key_ = f"{name}/{k}"
+            key_ = f"{name}/{k}" if name else k
             diag[key_] = diag.get(key_, 0) + v
 
         rho_acc = jnp.zeros((ncl + 1,), jnp.float32) if carried else None
 
-        # ---- async(n) pipeline: push queue k, issue its migration
-        #      collective, then push queue k+1 while k's permute flies ----
+        # ---- MC source inputs: one electron-density deposit (halo-summed
+        #      at the shared edge nodes) and per-queue event keys, derived
+        #      identically in ring and legacy modes so the two paths draw
+        #      the same physics from the same seed ----
+        ne_local = None
+        iparams = eparams = None
+        ion_keys = see_keys = None
+        if ion is not None:
+            iparams = collisions.IonizationParams(
+                rate=cfg.ionization_rate, vth_electron=cfg.ionization_vth_e)
+            ne_local = halo.halo_sum(
+                deposit_density(grid_local, species[ion[1]]),
+                axis_names, mesh, is_first, is_last)
+        if see_pairs:
+            eparams = boundaries.EmissionParams(
+                yield_=cfg.emission_yield, vth_emit=cfg.emission_vth)
+        if has_mc:
+            key, k_mc = jax.random.split(key)
+            k_mc = jax.random.fold_in(k_mc, r)
+            k_ion, k_see = jax.random.split(k_mc)
+            ion_keys = jax.random.split(k_ion, n_q)
+            if see_pairs:
+                see_keys = jax.random.split(
+                    k_see, len(see_pairs) * n_q).reshape(
+                    (len(see_pairs), n_q, -1))
+
+        # ---- async(n) pipeline: push queue k, run its MC sources, issue
+        #      its migration collective, then push queue k+1 while k's
+        #      permute flies ----
         staged = []
+        birth_blocks: list[list] = [[] for _ in groups]
         for g, idxs in enumerate(groups):
             scs, qm, dts, charges = group_meta(idxs)
             strides = [sc.stride for sc in scs]
+            dtype = species[idxs[0]].x.dtype
             st = stack_species([species[i] for i in idxs])
             kept_qs, pending_packs = [], []
             for k_q, q in enumerate(_split_queues(st, n_q)):
-                out, hl, hr, pdiag, rho_q = mover.push_stacked(
+                out, hl, hr, pdiag, rho_push = mover.push_stacked(
                     q, e, grid_local, qm, dts, b=cfg.b_field,
                     boundary="open", gather_mode=cfg.gather_mode,
-                    charges=charges if carried else None)
+                    charges=charges if carried else None,
+                    rho_carry=rho_acc if carried else None)
                 if any(s > 1 for s in strides):
                     # sub-cycling: heavy species push every `stride` steps
                     do = jnp.mod(state.step, jnp.asarray(strides)) == 0
@@ -560,16 +748,83 @@ def make_engine_step(ecfg: EngineConfig, mesh: Mesh, *, upto: str = "full",
                         dacc(sc.name, k, v[j])
                 if upto == "push":
                     if carried:
-                        rho_acc = rho_acc + rho_q   # keep the in-pass deposit
-                    kept_qs.append(out)             # live in the probe output
+                        rho_acc = rho_push      # keep the in-pass deposit
+                    kept_qs.append(out)         # live in the probe output
                     continue
+
+                # ---- MC ionization on this queue (before the exchange, so
+                #      ionized neutrals are never packed as crossers) ----
+                if ion is not None and ion[0] in idxs:
+                    ni, ei, ii = ion
+                    jn = idxs.index(ni)
+                    qn = SpeciesBuffer(x=out.x[jn], v=out.v[jn],
+                                       w=out.w[jn], alive=out.alive[jn])
+                    pack = collisions.ionize_packed(
+                        ion_keys[k_q], qn, grid_local, iparams, cfg.dt,
+                        ne_local, b_q)
+                    (ge, je), (gi, ji) = loc[ei], loc[ii]
+                    if use_ring:
+                        # pre-claim one electron + one ion slot per birth
+                        # under the shared min-count budget: a birth gets
+                        # both slots or neither (no half pairs, no leaks)
+                        if ge == gi:
+                            avail = jnp.minimum(rings[ge].count[je],
+                                                rings[ge].count[ji])
+                            rings[ge], dest, okm = _claim_rows(
+                                rings[ge], {je: pack.ok, ji: pack.ok},
+                                group_caps[ge], avail)
+                            allowed = okm[je]
+                            dest_e, dest_i = dest[je], dest[ji]
+                        else:
+                            avail = jnp.minimum(rings[ge].count[je],
+                                                rings[gi].count[ji])
+                            rings[ge], de, oe = _claim_rows(
+                                rings[ge], {je: pack.ok}, group_caps[ge],
+                                avail)
+                            rings[gi], di, _ = _claim_rows(
+                                rings[gi], {ji: pack.ok}, group_caps[gi],
+                                avail)
+                            allowed = oe[je]
+                            dest_e, dest_i = de[je], di[ji]
+                        # freed neutral slots feed the ring like leavers
+                        # (queue slot j -> global slot j * n_q + k_q)
+                        rings[g] = _push_rows(
+                            rings[g],
+                            {jn: (pack.slot * n_q + k_q, allowed)}, b_q)
+                    else:
+                        allowed = pack.ok
+                        dest_e = dest_i = None
+                    killed = kill_packed(qn, pack.slot, allowed)
+                    out = StackedSpecies(
+                        x=out.x.at[jn].set(killed.x),
+                        v=out.v.at[jn].set(killed.v),
+                        w=out.w.at[jn].set(killed.w),
+                        alive=out.alive.at[jn].set(killed.alive))
+                    e_row = (pack.x, pack.v_electron, pack.w, allowed,
+                             dest_e)
+                    i_row = (pack.x, pack.v_ion, pack.w, allowed, dest_i)
+                    if ge == gi:
+                        birth_blocks[ge].append(_birth_block(
+                            len(groups[ge]), b_q, group_caps[ge], dtype,
+                            {je: e_row, ji: i_row}))
+                    else:
+                        birth_blocks[ge].append(_birth_block(
+                            len(groups[ge]), b_q, group_caps[ge], dtype,
+                            {je: e_row}))
+                        birth_blocks[gi].append(_birth_block(
+                            len(groups[gi]), b_q, group_caps[gi], dtype,
+                            {ji: i_row}))
+                    n_born = jnp.sum(allowed.astype(jnp.int32))
+                    dacc(None, "n_ionized", n_born)
+                    dacc(None, "birth_overflow", pack.n_events - n_born)
+
                 (kept, pack_l, pack_r, lv_x, lv_w, free_idx, free_ok,
-                 dmig) = _exchange_queue(
+                 abs_l, abs_r, dmig) = _exchange_queue(
                     out, l_local, m_q, cfg.boundary, is_first, is_last)
                 if carried:
                     # leavers were deposited at their raw (edge-clipped)
                     # positions by the in-pass deposit; take them back out
-                    rho_acc = rho_acc + rho_q - deposit_windowed(
+                    rho_acc = rho_push - deposit_windowed(
                         grid_local, lv_x, charges[:, None] * lv_w)
                 if use_ring:
                     # leaver slots are free from here on: feed the ring from
@@ -577,6 +832,31 @@ def make_engine_step(ecfg: EngineConfig, mesh: Mesh, *, upto: str = "full",
                     # slot j * n_q + k_q), no extra scan
                     rings[g] = jax.vmap(ring_push)(
                         rings[g], free_idx * n_q + k_q, free_ok)
+
+                # ---- SEE: yield-thinned secondaries off this queue's
+                #      absorbed rows (already packed by the exchange) ----
+                for pi, (p, t) in enumerate(see_pairs):
+                    if p not in idxs:
+                        continue
+                    jp = idxs.index(p)
+                    emit, ex, ev, ew = boundaries.emission_candidates(
+                        see_keys[pi, k_q], abs_l[jp], abs_r[jp], eparams,
+                        l_local, dtype)
+                    gt, jt = loc[t]
+                    if use_ring:
+                        rings[gt], dstm, okm = _claim_rows(
+                            rings[gt], {jt: emit}, group_caps[gt])
+                        ok_t, dest_t = okm[jt], dstm[jt]
+                    else:
+                        ok_t, dest_t = emit, None
+                    birth_blocks[gt].append(_birth_block(
+                        len(groups[gt]), 2 * m_q, group_caps[gt], dtype,
+                        {jt: (ex, ev, ew, ok_t, dest_t)}))
+                    n_emit = jnp.sum(ok_t.astype(jnp.int32))
+                    dacc(cfg.species[t].name, "emitted", n_emit)
+                    dacc(cfg.species[t].name, "emission_overflow",
+                         jnp.sum((emit & ~ok_t).astype(jnp.int32)))
+
                 recv_r = halo.ppermute_tree(pack_l, axis_names, -1, mesh)
                 recv_l = halo.ppermute_tree(pack_r, axis_names, +1, mesh)
                 kept_qs.append(StackedSpecies(
@@ -601,10 +881,11 @@ def make_engine_step(ecfg: EngineConfig, mesh: Mesh, *, upto: str = "full",
 
         # ---- deferred merge: every queue's collective has been issued.
         #      Ring path: claim a dead slot per arrival from the free-slot
-        #      ring (O(max_migration)) and carry the rows as pending — the
+        #      ring (O(max_migration)), append the queues' birth blocks
+        #      (slots already claimed), and carry the rows as pending — the
         #      scatter happens at the NEXT step's ingest. Legacy path
-        #      (ionization active): one full-capacity free-slot scan per
-        #      species, scattered immediately. ----
+        #      (use_ring=False): one full-capacity free-slot scan per
+        #      species over arrivals AND births, scattered immediately ----
         pend_out = list(empty_pend)
         for g, (idxs, charges, kept_qs, pending_packs) in enumerate(staged):
             scs = [cfg.species[i] for i in idxs]
@@ -617,41 +898,40 @@ def make_engine_step(ecfg: EngineConfig, mesh: Mesh, *, upto: str = "full",
                 rings[g], dest, accepted = jax.vmap(
                     lambda rg, wnt: ring_claim(rg, wnt, cap_g))(
                     rings[g], cand.alive)
-                pend_out[g] = PendingArrivals(
+                blocks = [PendingArrivals(
                     x=cand.x, v=cand.v, w=cand.w * accepted,
-                    alive=cand.alive & accepted, dest=dest)
+                    alive=cand.alive & accepted, dest=dest)]
+                blocks += birth_blocks[g]
+                pend_g = blocks[0] if len(blocks) == 1 else jax.tree.map(
+                    lambda *xs: jnp.concatenate(xs, axis=1), *blocks)
+                pend_out[g] = pend_g
                 dropped = jnp.sum((cand.alive & ~accepted).astype(jnp.int32),
                                   axis=1)
                 write_back(idxs, full)
+                if carried:
+                    rho_acc = rho_acc + deposit_windowed(
+                        grid_local, pend_g.x,
+                        charges[:, None] * pend_g.w * pend_g.alive)
             else:
-                merged, dropped, accepted = _inject_rows(full, cand)
+                extra = [SpeciesBuffer(x=b.x, v=b.v, w=b.w, alive=b.alive)
+                         for b in birth_blocks[g]]
+                cand_all = cand if not extra else jax.tree.map(
+                    lambda *xs: jnp.concatenate(xs, axis=1), cand, *extra)
+                merged, dropped, accepted = _inject_rows(full, cand_all)
                 write_back(idxs, merged)
-            if carried:
-                rho_acc = rho_acc + deposit_windowed(
-                    grid_local, cand.x, charges[:, None] * cand.w * accepted)
+                if carried:
+                    rho_acc = rho_acc + deposit_windowed(
+                        grid_local, cand_all.x,
+                        charges[:, None] * cand_all.w * accepted)
             for j, sc in enumerate(scs):
                 dacc(sc.name, "merge_dropped", dropped[j])
         rho_out = rho_acc[None] if carried else state.rho
         if upto == "merge":
             return pack_state(rho_out, pend_out), e[None]
 
-        # ---- MC collisions (the paper's §3.3 scenario; legacy merge path,
-        #      see _uses_ring) ----
-        if cfg.ionization is not None:
-            ni, ei, ii = cfg.ionization
-            key, sub = jax.random.split(key)
-            sub = jax.random.fold_in(sub, r)
-            params = collisions.IonizationParams(
-                rate=cfg.ionization_rate, vth_electron=cfg.ionization_vth_e)
-            neu, ele, ion, dion = collisions.ionize(
-                sub, species[ni], species[ei], species[ii], grid_local,
-                params, cfg.dt)
-            species[ni], species[ei], species[ii] = neu, ele, ion
-            diag.update(dion)
-
         # ---- global diagnostics (psum over domains; skew uses pmax) ----
-        # in-flight arrivals are resident particles: reduce over an
-        # EFFECTIVE buffer with pending scattered into its (dead, w == 0)
+        # in-flight arrivals and births are resident particles: reduce over
+        # an EFFECTIVE buffer with pending scattered into its (dead, w == 0)
         # pre-claimed slots. The per-slot writes land on exact zeros, so the
         # reductions match the post-ingest buffer bitwise — a separate
         # pending sum term would flip the charge total by an ulp and break
@@ -693,12 +973,13 @@ def _engine_extras(ecfg: EngineConfig, mesh: Mesh, bufs):
     """Rings + empty pending for per-domain species buffers (init-time only:
     the one full free-slot scan the ring design allows)."""
     groups = _capacity_groups(ecfg, mesh)
+    prows = _group_pending_rows(ecfg, groups)
     rings, pending = [], []
-    for idxs in groups:
+    for g, idxs in enumerate(groups):
         st = stack_species([bufs[i] for i in idxs])
         rings.append(jax.vmap(ring_init)(st.alive))
         pending.append(_empty_pending(
-            len(idxs), ecfg.pending_rows, st.capacity, st.x.dtype))
+            len(idxs), prows[g], st.capacity, st.x.dtype))
     return tuple(rings), tuple(pending)
 
 
@@ -710,7 +991,7 @@ def attach_engine_state(ecfg: EngineConfig, mesh: Mesh,
     Use this to feed the engine a state produced by ``pic.init_state`` (via
     the usual ``[None]`` lift) or by an older checkpoint.
     """
-    if not _uses_ring(ecfg):
+    if not ecfg.use_ring:
         return EngineState(pic=state, rings=(), pending=())
 
     def local(st: PICState) -> EngineState:
@@ -735,7 +1016,7 @@ def init_engine_state(ecfg: EngineConfig, mesh: Mesh,
     l_local = ncl * cfg.dx
     d = ecfg.num_domains(mesh)
     carried = _carries_rho(ecfg)
-    use_ring = _uses_ring(ecfg)
+    use_ring = ecfg.use_ring
     groups = _capacity_groups(ecfg, mesh)
 
     def local_init() -> EngineState:

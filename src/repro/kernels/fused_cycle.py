@@ -35,14 +35,19 @@ LANES = 128
 
 
 def _fused_kernel(x_ref, vx_ref, vy_ref, vz_ref, alive_ref, w_ref, e_ref,
-                  xo_ref, vxo_ref, vyo_ref, vzo_ref, ao_ref, hl_ref, hr_ref,
-                  wo_ref, rho_ref, *, x0: float, dx: float, nc: int,
-                  length: float, qm_dt: float, dt: float, charge: float,
-                  b: tuple[float, float, float], boundary: str,
-                  tile_rows: int, ng_pad: int, do_deposit: bool):
+                  rho0_ref, xo_ref, vxo_ref, vyo_ref, vzo_ref, ao_ref,
+                  hl_ref, hr_ref, wo_ref, rho_ref, *, x0: float, dx: float,
+                  nc: int, length: float, qm_dt: float, dt: float,
+                  charge: float, b: tuple[float, float, float],
+                  boundary: str, tile_rows: int, ng_pad: int,
+                  do_deposit: bool):
     @pl.when(pl.program_id(0) == 0)
     def _init():
-        rho_ref[...] = jnp.zeros_like(rho_ref)
+        # the VMEM accumulator starts from rho0 (zeros normally): a raw-
+        # unit (times-dx) seed for chaining multiple launches over one
+        # accumulator. ops.fused_push_deposit adds its (ng,)/dx rho_carry
+        # OUTSIDE instead, keeping bitwise parity with the jnp path.
+        rho_ref[...] = rho0_ref[...]
 
     x = x_ref[...]
     vx, vy, vz = vx_ref[...], vy_ref[...], vz_ref[...]
@@ -125,7 +130,8 @@ def _fused_kernel(x_ref, vx_ref, vy_ref, vz_ref, alive_ref, w_ref, e_ref,
 
 
 def fused_push_deposit_pallas(x: Array, vx: Array, vy: Array, vz: Array,
-                              alive_f: Array, w: Array, e_pad: Array, *,
+                              alive_f: Array, w: Array, e_pad: Array,
+                              rho0_pad: Array | None = None, *,
                               x0: float, dx: float, nc: int, length: float,
                               qm: float, dt: float, charge: float,
                               b: tuple[float, float, float], boundary: str,
@@ -135,12 +141,15 @@ def fused_push_deposit_pallas(x: Array, vx: Array, vy: Array, vz: Array,
 
     Returns (xn, vxn, vyn, vzn, alive_n, hit_l, hit_r, wn, rho) where rho is
     the (1, ng_pad) node charge (times dx — the caller divides, matching
-    ``kernels/deposit.py``).
+    ``kernels/deposit.py``). ``rho0_pad`` (1, ng_pad), same units, seeds the
+    VMEM accumulator — the carried-rho hook for multi-call accumulation.
     """
     rows = x.shape[0]
     assert rows % tile_rows == 0, (rows, tile_rows)
     grid = (rows // tile_rows,)
     ng_pad = e_pad.shape[1]
+    if rho0_pad is None:
+        rho0_pad = jnp.zeros((1, ng_pad), x.dtype)
 
     tile = pl.BlockSpec((tile_rows, LANES), lambda r: (r, 0))
     field = pl.BlockSpec((1, ng_pad), lambda r: (0, 0))  # VMEM-resident
@@ -155,9 +164,9 @@ def fused_push_deposit_pallas(x: Array, vx: Array, vy: Array, vz: Array,
     outs = pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[tile] * 6 + [field],
+        in_specs=[tile] * 6 + [field, field],
         out_specs=[tile] * 8 + [field],
         out_shape=out_shape,
         interpret=interpret,
-    )(x, vx, vy, vz, alive_f, w, e_pad)
+    )(x, vx, vy, vz, alive_f, w, e_pad, rho0_pad)
     return outs

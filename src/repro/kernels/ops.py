@@ -67,17 +67,23 @@ def mover_push(x: Array, v: Array, alive: Array, e: Array, *, x0: float,
                                    "charge", "b", "boundary", "tile_rows",
                                    "deposit"))
 def fused_push_deposit(x: Array, v: Array, alive: Array, w: Array, e: Array,
-                       *, x0: float, dx: float, length: float, qm: float,
-                       dt: float, charge: float,
+                       rho_carry: Array | None = None, *, x0: float,
+                       dx: float, length: float, qm: float, dt: float,
+                       charge: float,
                        b: tuple[float, float, float] = (0.0, 0.0, 0.0),
                        boundary: str = "periodic", tile_rows: int = 8,
                        deposit: bool = True):
     """Single-pass fused cycle (kernels/fused_cycle.py).
 
     Returns (x, v, alive, hit_left, hit_right, w, rho) — the pushed state
-    plus the POST-push node charge density rho: (ng,)/dx. With
-    ``deposit=False`` the in-kernel deposition is compiled out and rho is
-    all-zero.
+    plus the POST-push node charge density rho: (ng,)/dx, accumulated on top
+    of ``rho_carry`` (same (ng,)/dx units) when one is given. The carry is
+    added OUTSIDE the kernel so the result is bitwise-identical to the
+    pure-jnp ``rho_carry + deposit`` path (seeding the VMEM accumulator
+    would send the carry through a *dx/dx float round trip; the kernel's
+    ``rho0_pad`` seed remains available for raw-unit multi-launch
+    chaining). With ``deposit=False`` the in-kernel deposition is compiled
+    out and rho passes the carry through (zeros without one).
     """
     cap = x.shape[0]
     nc = round(length / dx)
@@ -87,16 +93,19 @@ def fused_push_deposit(x: Array, v: Array, alive: Array, w: Array, e: Array,
     ep = plane_pad(e, LANES)[None, :]
 
     xn, vxn, vyn, vzn, an, hl, hr, wn, rho = _fused.fused_push_deposit_pallas(
-        xp, vxp, vyp, vzp, ap, wp, ep, x0=x0, dx=dx, nc=nc, length=length,
-        qm=qm, dt=dt, charge=charge, b=b, boundary=boundary,
+        xp, vxp, vyp, vzp, ap, wp, ep, None, x0=x0, dx=dx, nc=nc,
+        length=length, qm=qm, dt=dt, charge=charge, b=b, boundary=boundary,
         tile_rows=tile_rows, interpret=_interpret(), do_deposit=deposit)
 
     def unpad(p):
         return from_planes(p, cap)
 
     v_out = jnp.stack([unpad(vxn), unpad(vyn), unpad(vzn)], axis=-1)
+    rho_out = rho[0, :ng] / dx
+    if rho_carry is not None:
+        rho_out = rho_carry + rho_out
     return (unpad(xn), v_out, unpad(an) > 0.5, unpad(hl) > 0.5,
-            unpad(hr) > 0.5, unpad(wn), rho[0, :ng] / dx)
+            unpad(hr) > 0.5, unpad(wn), rho_out)
 
 
 @partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k"))

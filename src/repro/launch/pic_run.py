@@ -2,6 +2,7 @@
 
     PYTHONPATH=src python -m repro.launch.pic_run --steps 100 \
         [--domains 4] [--async-n 2] [--rebalance-every K] \
+        [--rebalance-skew T] [--max-births N] [--see-yield Y] \
         [--strategy unified|explicit|async_batched|fused] \
         [--field-solve] [--diag-every K] [--phases]
 
@@ -9,11 +10,16 @@
 (``repro.distributed``): the domain's particles are split into --async-n
 queues whose migration collectives overlap the next queue's push, and
 --rebalance-every K periodically compacts + re-splits the queues so their
-occupancy stays even under churn (per-queue counts and skew are printed).
-If the process exposes fewer jax devices than --domains, emulated host
-devices are requested via XLA_FLAGS before jax initializes (a TPU slice
-provides real ones natively). --phases prints the per-phase timing
-breakdown.
+occupancy stays even under churn (per-queue counts and skew are printed);
+--rebalance-skew T additionally triggers the re-split whenever the
+per-queue occupancy skew exceeds T. The scenario's MC ionization runs on
+the same queue pipeline through the free-slot ring (--max-births bounds
+births per step, like max_migration bounds sends); --see-yield Y switches
+the walls to absorbing and re-emits secondary electrons with yield Y
+(BIT1's plasma-wall SEE source, also ring-routed). If the process exposes
+fewer jax devices than --domains, emulated host devices are requested via
+XLA_FLAGS before jax initializes (a TPU slice provides real ones
+natively). --phases prints the per-phase timing breakdown.
 """
 
 from __future__ import annotations
@@ -35,6 +41,15 @@ def main() -> None:
     ap.add_argument("--rebalance-every", type=int, default=0,
                     help="compact + re-split the async queues every K steps "
                          "(0 = never); bounds per-queue occupancy skew")
+    ap.add_argument("--rebalance-skew", type=int, default=0,
+                    help="also compact + re-split whenever the per-queue "
+                         "occupancy skew exceeds this threshold (0 = off)")
+    ap.add_argument("--max-births", type=int, default=8192,
+                    help="ionization birth budget per domain per step "
+                         "(clamped births retry; see birth_overflow)")
+    ap.add_argument("--see-yield", type=float, default=0.0,
+                    help="enable absorbing walls + secondary electron "
+                         "emission with this yield (0 = off)")
     ap.add_argument("--strategy", default="unified",
                     choices=["unified", "explicit", "async_batched",
                              "fused"])
@@ -60,20 +75,27 @@ def main() -> None:
     import jax
     import numpy as np
 
-    from repro.configs.pic_bit1 import make_bench_config, make_engine_config
+    from repro.configs.pic_bit1 import (make_bench_config, make_engine_config,
+                                        make_see_config)
     from repro.core import pic
     from repro.distributed import engine, perf
     from repro.launch.mesh import make_debug_mesh
 
-    cfg = make_bench_config(nc=args.nc, n=args.particles,
-                            strategy=args.strategy,
-                            diag_every=args.diag_every)
+    if args.see_yield > 0.0:
+        cfg = make_see_config(nc=args.nc, n=args.particles,
+                              strategy=args.strategy,
+                              emission_yield=args.see_yield,
+                              diag_every=args.diag_every)
+    else:
+        cfg = make_bench_config(nc=args.nc, n=args.particles,
+                                strategy=args.strategy,
+                                diag_every=args.diag_every)
     if args.field_solve:
         cfg = dataclasses.replace(cfg, field_solve=True)
     t0 = time.perf_counter()
     mesh = ecfg = None
     if (args.domains == 1 and args.async_n == 1
-            and args.rebalance_every == 0):
+            and args.rebalance_every == 0 and args.rebalance_skew == 0):
         state = pic.init_state(cfg, 0)
         final, diags = jax.block_until_ready(
             jax.jit(lambda s: pic.run(cfg, args.steps, state=s))(state))
@@ -86,7 +108,9 @@ def main() -> None:
         mesh = make_debug_mesh(data=args.domains, model=1)
         ecfg = make_engine_config(cfg, max_migration=8192,
                                   async_n=args.async_n,
-                                  rebalance_every=args.rebalance_every)
+                                  max_births=args.max_births,
+                                  rebalance_every=args.rebalance_every,
+                                  rebalance_skew=args.rebalance_skew)
         state = engine.init_engine_state(ecfg, mesh, 0)
         step = engine.make_engine_step(ecfg, mesh)
         for _ in range(args.steps):
@@ -94,6 +118,11 @@ def main() -> None:
         jax.block_until_ready(state.species[0].x)
         counts = {k: int(np.asarray(v)) for k, v in diag.items()
                   if k.endswith("/count")}
+        sources = {k: int(np.asarray(v)) for k, v in diag.items()
+                   if k in ("n_ionized", "birth_overflow")
+                   or k.endswith(("/emitted", "/emission_overflow"))}
+        if sources:
+            print("mc sources (last step):", sources)
         balance = {k: np.asarray(v).tolist() for k, v in diag.items()
                    if k.endswith(("/queue_occ", "/queue_skew"))}
     wall = time.perf_counter() - t0

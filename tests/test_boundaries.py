@@ -26,9 +26,10 @@ def test_emission_yields_expected_count_and_direction():
     assert bool(hl.all()) and not bool(hr.any())
     electrons = make_species(2048)
     params = EmissionParams(yield_=0.5, vth_emit=1.0)
-    electrons, ediag = wall_emission(jax.random.PRNGKey(0), buf, hl, hr,
-                                     electrons, params, g.length)
+    electrons, ediag, erows = wall_emission(jax.random.PRNGKey(0), buf, hl,
+                                            hr, electrons, params, g.length)
     n_emit = int(ediag["emitted"])
+    assert n_emit == int(jnp.sum(erows.ok))       # rows report the landings
     assert abs(n_emit - 256) < 60                  # binomial(512, 0.5)
     assert int(ediag["emission_dropped"]) == 0
     # emitted from the LEFT wall: all positions near 0, vx > 0
@@ -43,10 +44,12 @@ def test_emission_respects_capacity_accounting():
     buf = _wall_hitters(128, g.length, toward_left=False)
     target = make_species(64)                      # too small on purpose
     params = EmissionParams(yield_=1.0, vth_emit=0.5)
-    target, diag = wall_emission(jax.random.PRNGKey(1), buf,
-                                 jnp.zeros(128, bool), jnp.ones(128, bool),
-                                 target, params, g.length)
+    target, diag, erows = wall_emission(jax.random.PRNGKey(1), buf,
+                                        jnp.zeros(128, bool),
+                                        jnp.ones(128, bool),
+                                        target, params, g.length)
     assert int(target.count()) == 64               # filled to capacity
+    assert int(diag["emitted"]) == 64              # landings, not candidates
     assert int(diag["emission_dropped"]) == 128 - 64
     # right-wall emission points into the domain (vx < 0)
     alive = np.asarray(target.alive)

@@ -13,7 +13,10 @@ full-capacity ``free_slots`` scan in the distributed engine; these tests pin
   step (the old merge's ``free_slots`` scan was one per species per step).
 """
 
+import dataclasses
+
 import numpy as np
+import pytest
 
 import jax
 import jax.numpy as jnp
@@ -24,6 +27,25 @@ from repro.core.particles import (FreeSlotRing, SpeciesBuffer, inject_at,
                                   ring_from_counts, ring_init, ring_push)
 from repro.distributed import engine
 from repro.launch.mesh import make_debug_mesh
+
+try:                                   # gated like the other property suites
+    from hypothesis import given, settings, strategies as hyp_st
+    HAVE_HYPOTHESIS = True
+except ImportError:                    # pragma: no cover - optional dep
+    HAVE_HYPOTHESIS = False
+
+    def given(*a, **k):                # no-op decorators keep collection sane
+        return lambda f: f
+
+    settings = given
+
+    class hyp_st:                      # type: ignore[no-redef]
+        @staticmethod
+        def integers(*a, **k):
+            return None
+
+needs_hypothesis = pytest.mark.skipif(
+    not HAVE_HYPOTHESIS, reason="hypothesis not installed")
 
 
 # ------------------------------------------------------------------ unit
@@ -123,6 +145,114 @@ def test_inject_at_is_the_inject_masked_scatter():
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+# ------------------------------------------------- hypothesis properties
+
+
+def _ring_window(ring) -> list[int]:
+    """The live FIFO window of a ring, in claim order."""
+    r = ring.slots.shape[0]
+    return [int(ring.slots[(int(ring.head) + i) % r])
+            for i in range(int(ring.count))]
+
+
+@needs_hypothesis
+@settings(max_examples=25, deadline=None)
+@given(cap=hyp_st.integers(4, 48), seed=hyp_st.integers(0, 2 ** 16),
+       rounds=hyp_st.integers(1, 24))
+def test_ring_property_interleaved_leaver_birth_traffic(cap, seed, rounds):
+    """Random interleaved push (leavers/kills) and claim (births/arrivals)
+    traffic against a Python FIFO model: the live window is the model
+    exactly, through wraparound, ring-full and ring-empty edges."""
+    rng = np.random.RandomState(seed)
+    alive = rng.rand(cap) < rng.rand()
+    ring = ring_init(jnp.asarray(alive))
+    model = [int(i) for i in np.nonzero(~alive)[0]]
+    for _ in range(rounds):
+        # a leaver burst: kill up to 3 alive slots, push their indices
+        kill_idx = np.nonzero(alive)[0][: rng.randint(0, 4)]
+        m = 4
+        idx = np.full((m,), cap)
+        ok = np.zeros((m,), bool)
+        idx[: len(kill_idx)] = kill_idx
+        ok[: len(kill_idx)] = True
+        alive[kill_idx] = False
+        ring = ring_push(ring, jnp.asarray(idx), jnp.asarray(ok))
+        model.extend(int(i) for i in kill_idx)
+        # a birth burst: claim up to 5 slots back, optionally budget-capped
+        want = rng.rand(5) < rng.rand()
+        budget = rng.randint(0, 6) if rng.rand() < 0.5 else None
+        ring, dest, got = ring_claim(
+            ring, jnp.asarray(want), cap,
+            None if budget is None else jnp.asarray(budget, jnp.int32))
+        grants = 0
+        for j in range(5):
+            if bool(got[j]):
+                expect = model.pop(0)
+                assert int(dest[j]) == expect
+                alive[expect] = True
+                grants += 1
+            else:
+                assert int(dest[j]) == cap
+        if budget is not None:
+            assert grants <= budget
+        assert int(ring.count) == len(model)
+        assert _ring_window(ring) == model
+    # ring-empty edge: drain everything, then over-claim
+    ring, dest, got = ring_claim(ring, jnp.ones((cap + 1,), bool), cap)
+    assert int(np.asarray(got).sum()) == len(model)
+    assert int(ring.count) == 0
+    for j in range(cap + 1):
+        if bool(got[j]):
+            alive[int(dest[j])] = True   # drained slots are occupied now
+    # ring-full edge: kill every live slot -> the window is the capacity
+    to_kill = np.nonzero(alive)[0]
+    full_ring = ring
+    for start in range(0, len(to_kill), 4):
+        chunk = to_kill[start: start + 4]
+        idx = np.full((4,), cap)
+        ok = np.zeros((4,), bool)
+        idx[: len(chunk)] = chunk
+        ok[: len(chunk)] = True
+        full_ring = ring_push(full_ring, jnp.asarray(idx), jnp.asarray(ok))
+    assert int(full_ring.count) == cap
+    assert sorted(_ring_window(full_ring)) == list(range(cap))
+
+
+@needs_hypothesis
+@settings(max_examples=25, deadline=None)
+@given(cap=hyp_st.integers(1, 64), n_alive=hyp_st.integers(0, 64))
+def test_ring_from_counts_property(cap, n_alive):
+    """The closed-form post-compaction ring equals the scanned one for any
+    (capacity, alive-count) pair."""
+    n_alive = min(n_alive, cap)
+    alive = jnp.arange(cap) < n_alive
+    a, b = ring_init(alive), ring_from_counts(
+        jnp.asarray(n_alive, jnp.int32), cap)
+    assert int(a.count) == int(b.count) == cap - n_alive
+    assert _ring_window(a) == _ring_window(b)
+
+
+@needs_hypothesis
+@settings(max_examples=25, deadline=None)
+@given(seed=hyp_st.integers(0, 2 ** 16), budget=hyp_st.integers(0, 10))
+def test_ring_claim_budget_equals_external_clamp(seed, budget):
+    """claim(want, budget=B) == claim(want clamped to its first B winners):
+    the paired-birth budget path cannot diverge from explicit masking."""
+    cap = 24
+    rng = np.random.RandomState(seed)
+    alive = rng.rand(cap) < 0.5
+    want = jnp.asarray(rng.rand(8) < 0.7)
+    ring = ring_init(jnp.asarray(alive))
+    r1, d1, o1 = ring_claim(ring, want, cap,
+                            jnp.asarray(budget, jnp.int32))
+    rank = np.cumsum(np.asarray(want).astype(int)) - 1
+    clamped = jnp.asarray(np.asarray(want) & (rank < budget))
+    r2, d2, o2 = ring_claim(ring, clamped, cap)
+    np.testing.assert_array_equal(np.asarray(d1), np.asarray(d2))
+    np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
+    assert int(r1.count) == int(r2.count) and int(r1.head) == int(r2.head)
+
+
 # ------------------------------------------------- engine-state invariant
 
 
@@ -178,6 +308,35 @@ def test_engine_ring_invariant_after_kill_inject_migrate():
     assert int(np.asarray(diag["e/count"])) == 1024
     assert sum(int(np.asarray(diag[f"{s}/count"]))
                for s in ("e", "D+")) == 2048
+
+
+def test_engine_ring_invariant_with_mc_sources():
+    """The free-set invariant must survive the MC sources too: ionization
+    kills push neutral slots, pair births and SEE secondaries hold eager
+    pre-claims in pending — ring ∪ pending-dest stays EXACTLY the dead
+    set (a half-claimed pair or a leaked emission slot would drift it)."""
+    cfg = _mc_cfg(2048, ionization=True, see=True)
+    cfg = dataclasses.replace(cfg, dt=0.5,
+                              ionization_rate=5e-3)   # hot MC churn
+    mesh = make_debug_mesh(data=1, model=1)
+    ecfg = engine.EngineConfig(pic=cfg, axis_names=("data",), async_n=2,
+                               max_migration=256, max_births=256,
+                               rebalance_every=3)
+    state = engine.init_engine_state(ecfg, mesh, 1)
+    step = engine.make_engine_step(ecfg, mesh)
+    born = 0
+    for it in range(8):
+        state, diag = step(state)
+        born += int(np.asarray(diag["n_ionized"]))
+        sets = _ring_sets(state, ecfg, mesh)
+        for (g, i), (live, dests) in sets.items():
+            alive = np.asarray(state.pic.species[i].alive)[0]
+            dead = set(int(s) for s in np.nonzero(~alive)[0])
+            assert len(live) == len(set(live)), (it, i, "ring dup")
+            assert len(dests) == len(set(dests)), (it, i, "dest dup")
+            assert set(live).isdisjoint(dests), (it, i, "claimed twice")
+            assert set(live) | set(dests) == dead, (it, i, "free-set drift")
+    assert born > 0                       # the churn is real
 
 
 def test_rebalance_resplits_skewed_occupancy():
@@ -250,3 +409,56 @@ def test_merge_does_no_full_capacity_scan():
     assert not full, (
         f"cumsum over a full-capacity axis is back (shapes={full}): the "
         f"merge phase scales with total capacity again")
+
+
+def _mc_cfg(cap, *, ionization=False, see=False, field_solve=False):
+    """3-species config with the MC sources the engine now ring-routes."""
+    sp = (pic.SpeciesConfig("e", -1.0, 1.0, cap, cap // 2, vth=1.0),
+          pic.SpeciesConfig("D+", 1.0, 3672.0, cap, cap // 2, vth=0.02),
+          pic.SpeciesConfig("D", 0.0, 3672.0, cap, cap // 2, vth=0.05))
+    kw: dict = {}
+    if ionization:
+        kw.update(ionization=(2, 0, 1), ionization_rate=1e-3,
+                  ionization_vth_e=1.0)
+    if see:
+        kw.update(boundary="absorb", wall_emission=((0, 0),),
+                  emission_yield=0.5, emission_vth=0.5)
+    return pic.PICConfig(nc=64, dx=1.0, dt=0.2, species=sp,
+                         field_solve=field_solve, strategy="fused", **kw)
+
+
+def test_mc_source_steps_do_no_full_capacity_scan():
+    """Ionization and SEE engine configs (``_uses_ring`` is gone — the ring
+    path is THE path) must compile with no full-capacity free-slot scan
+    either: ionization packs its events per queue and its births pop
+    pre-claimed ring slots; SEE claims off the already-packed absorbed
+    rows. Only the legacy parity mode (use_ring=False) may scan."""
+    cap = 8192
+    mesh = make_debug_mesh(data=1, model=1)
+    cases = {
+        "ionization": _mc_cfg(cap, ionization=True),
+        "ionization+field": _mc_cfg(cap, ionization=True, field_solve=True),
+        "see": _mc_cfg(cap, see=True),
+        "ionization+see": _mc_cfg(cap, ionization=True, see=True),
+    }
+    for tag, cfg in cases.items():
+        ecfg = engine.EngineConfig(pic=cfg, axis_names=("data",), async_n=2,
+                                   max_migration=512, max_births=512)
+        state = engine.init_engine_state(ecfg, mesh, 0)
+        step = engine.make_engine_step(ecfg, mesh, donate=False)
+        shapes = _collect_cumsum_shapes(
+            jax.make_jaxpr(step)(state).jaxpr, [])
+        full = [s for s in shapes if s and s[-1] >= cap]
+        assert not full, (
+            f"[{tag}] full-capacity cumsum is back (shapes={full}): an MC "
+            f"source re-introduced a capacity-scaling scan")
+        # the legacy parity mode still scans — proves the assertion bites
+        legacy = engine.EngineConfig(
+            pic=cfg, axis_names=("data",), async_n=2, max_migration=512,
+            max_births=512, use_ring=False)
+        lstate = engine.init_engine_state(legacy, mesh, 0)
+        lstep = engine.make_engine_step(legacy, mesh, donate=False)
+        lshapes = _collect_cumsum_shapes(
+            jax.make_jaxpr(lstep)(lstate).jaxpr, [])
+        assert any(s and s[-1] >= cap for s in lshapes), (
+            f"[{tag}] expected the legacy full-scan merge to scan")
