@@ -12,17 +12,21 @@ physical cores, so this measures harness overhead/correctness, not parallel
 speedup — the JSON records the environment so the numbers are never
 mistaken for the paper's).
 
-Two scenarios:
+Three scenarios:
 
 * ``transport`` — migration + halo field solve, no MC sources (the pure
   queue-pipeline workload);
 * ``ionization`` — the paper's §3.3 BIT1 test: MC ionization on the queue
   pipeline through the free-slot ring, field solve off (as the paper's
   test runs it). This is the MC-source workload the ring-aware merge
-  exists for.
+  exists for;
+* ``collisions`` — the binary-collision menu (elastic + charge exchange +
+  Coulomb) on the per-cell substrate, ionization off: isolates the
+  ``collide`` phase, run with ``cell_order=True`` so the rebalance
+  exercises the BIT1-style counting sort by cell.
 
     PYTHONPATH=src python -m benchmarks.bench_scaling [--smoke] \
-        [--scenario transport|ionization|both]
+        [--scenario transport|ionization|collisions|all]
 """
 
 from __future__ import annotations
@@ -35,18 +39,24 @@ import sys
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
-SCENARIOS = ("transport", "ionization")
+SCENARIOS = ("transport", "ionization", "collisions")
 
 _PROG = """
 import json
-from repro.configs.pic_bit1 import make_bench_config, make_engine_config
+from repro.configs.pic_bit1 import (make_bench_config, make_collision_config,
+                                    make_engine_config)
 from repro.distributed import engine, perf
 from repro.launch.mesh import make_debug_mesh
 import dataclasses
 
 p = json.loads(%r)
 mesh = make_debug_mesh(data=p["d"], model=1)
-cfg = make_bench_config(nc=p["nc"], n=p["n"], strategy="fused")
+if p["scenario"] == "collisions":
+    # the binary-collision menu on the per-cell substrate, ionization off:
+    # isolates the collide phase; cell_order exercises the counting sort
+    cfg = make_collision_config(nc=p["nc"], n=p["n"], strategy="fused")
+else:
+    cfg = make_bench_config(nc=p["nc"], n=p["n"], strategy="fused")
 if p["scenario"] == "transport":
     # enable the halo field phase so the 'field' row measures the
     # distributed solve, and drop the MC source to isolate the transport
@@ -54,12 +64,19 @@ if p["scenario"] == "transport":
     cfg = dataclasses.replace(cfg, field_solve=True, ionization=None)
 # 'ionization' keeps the paper's section-3.3 setting: MC ionization on the
 # async queue pipeline (ring-claimed births), field solver disabled
+# collisions default to a periodic rebalance so the cell_order counting
+# sort actually runs inside the measured steps
+reb = p["rebalance_every"] or (4 if p["scenario"] == "collisions" else 0)
 ecfg = make_engine_config(cfg, max_migration=p["m"], async_n=p["async_n"],
                           max_births=p["max_births"],
-                          rebalance_every=p["rebalance_every"])
+                          rebalance_every=reb,
+                          cell_order=(p["scenario"] == "collisions"))
 phases = perf.phase_breakdown(ecfg, mesh, iters=p["iters"], warmup=1)
 queues = perf.queue_stats(ecfg, mesh, steps=3)
-print("RESULTJSON " + json.dumps({"phases": phases, "queues": queues}))
+print("RESULTJSON " + json.dumps({
+    "phases": phases, "queues": queues,
+    "engine": {"rebalance_every": ecfg.rebalance_every,
+               "cell_order": ecfg.cell_order}}))
 """
 
 
@@ -91,6 +108,7 @@ def sweep(domains=(1, 2, 4, 8), *, nc: int = 4096, n: int = 131_072,
     if scenario not in SCENARIOS:
         raise ValueError(f"scenario must be one of {SCENARIOS}")
     per_domain, per_domain_queues = {}, {}
+    engine_knobs = None
     for d in domains:
         res = _measure(d, nc=nc, n=n, async_n=async_n, iters=iters,
                        max_migration=max_migration,
@@ -99,6 +117,7 @@ def sweep(domains=(1, 2, 4, 8), *, nc: int = 4096, n: int = 131_072,
         if res is not None:
             per_domain[d] = res["phases"]
             per_domain_queues[d] = res["queues"]
+            engine_knobs = res["engine"]
     if not per_domain:
         # every subprocess died: surface it instead of exiting 0 with no JSON
         raise RuntimeError(
@@ -107,7 +126,11 @@ def sweep(domains=(1, 2, 4, 8), *, nc: int = 4096, n: int = 131_072,
     metrics = perf.scaling_metrics(per_domain)
     payload = {
         "async_n": async_n,
-        "rebalance_every": rebalance_every,
+        # the EFFECTIVE engine knobs the subprocess ran with (the
+        # collisions scenario defaults to a periodic cell-order rebalance
+        # when none was requested — the JSON must record what ran)
+        "rebalance_every": engine_knobs["rebalance_every"],
+        "cell_order": engine_knobs["cell_order"],
         "config": {"nc": nc, "n_per_species": n, "iters": iters,
                    "max_migration": max_migration,
                    "max_births": max_births},
@@ -127,11 +150,11 @@ def sweep(domains=(1, 2, 4, 8), *, nc: int = 4096, n: int = 131_072,
 
 
 def run(domains=(1, 2, 4, 8), *, json_path: str = "BENCH_scaling.json",
-        mode: str = "full", scenario: str = "both", **kw) -> list[str]:
+        mode: str = "full", scenario: str = "all", **kw) -> list[str]:
     """Run the requested scenario sweep(s) and write one JSON artifact."""
     from repro.distributed import perf
 
-    names = SCENARIOS if scenario == "both" else (scenario,)
+    names = SCENARIOS if scenario in ("all", "both") else (scenario,)
     rows, scenarios = [], {}
     for name in names:
         r, payload = sweep(domains, scenario=name, **kw)
@@ -147,12 +170,13 @@ def run(domains=(1, 2, 4, 8), *, json_path: str = "BENCH_scaling.json",
 
 
 def smoke(json_path: str = "BENCH_scaling.json",
-          scenario: str = "both") -> list[str]:
+          scenario: str = "all") -> list[str]:
     """CI-sized scaling sweep at the acceptance point: small grid,
-    D in {1, 2, 4}, async_n=4, 2 iters — by default both the transport
-    scenario and the §3.3 MC-ionization scenario (the ring-routed source
-    workload). The single definition of the CI smoke point: the CLI
-    ``--smoke`` flag and ``benchmarks.run --smoke`` both land here."""
+    D in {1, 2, 4}, async_n=4, 2 iters — by default all three scenarios:
+    transport, the §3.3 MC-ionization workload (the ring-routed source)
+    and the binary-collision menu on the per-cell substrate. The single
+    definition of the CI smoke point: the CLI ``--smoke`` flag and
+    ``benchmarks.run --smoke`` both land here."""
     return run((1, 2, 4), nc=512, n=16_384, async_n=4, iters=2,
                max_migration=2048, max_births=2048, json_path=json_path,
                mode="smoke", scenario=scenario)
@@ -165,9 +189,9 @@ def main() -> list[str]:
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
-                    help="CI-sized sweep (D in {1,2,4}, both scenarios)")
-    ap.add_argument("--scenario", default="both",
-                    choices=SCENARIOS + ("both",))
+                    help="CI-sized sweep (D in {1,2,4}, all scenarios)")
+    ap.add_argument("--scenario", default="all",
+                    choices=SCENARIOS + ("all", "both"))
     ap.add_argument("--json", default="BENCH_scaling.json")
     args = ap.parse_args()
     if args.smoke:

@@ -4,10 +4,10 @@
 #
 # Lane 1: the full tier-1 suite on the default single device (multi-device
 #         tests spawn their own emulated-device subprocesses).
-# Lane 2: the distributed-engine parity, slot-ring and MC-source
-#         (ionization/SEE) tests again with 4 emulated host devices
-#         IN-process (XLA_FLAGS) — exercises shard_map collectives without
-#         the subprocess indirection.
+# Lane 2: the distributed-engine parity, slot-ring, MC-source
+#         (ionization/SEE) and binary-collision tests again with 4 emulated
+#         host devices IN-process (XLA_FLAGS) — exercises shard_map
+#         collectives without the subprocess indirection.
 # Lane 3: the smoke benchmarks: mover strategies (BENCH_smoke.json) and the
 #         engine scaling sweep with per-phase times + speedup/PE
 #         (BENCH_scaling.json). Full-size results that gate perf PRs live in
@@ -23,7 +23,7 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 python -m pytest -x -q
 XLA_FLAGS="--xla_force_host_platform_device_count=4" \
     python -m pytest -x -q tests/test_async_engine.py tests/test_slot_ring.py \
-    tests/test_mc_sources_engine.py
+    tests/test_mc_sources_engine.py tests/test_collisions_engine.py
 python -m benchmarks.run --smoke --json BENCH_smoke.json
 
 # ---- docs lane ----
@@ -33,3 +33,6 @@ python -m repro.launch.pic_run --steps 2 --nc 256 --particles 4096 \
     --domains 2 --async-n 2 --rebalance-every 2 --field-solve
 python -m repro.launch.pic_run --steps 2 --nc 256 --particles 4096 \
     --domains 2 --async-n 2 --rebalance-skew 64 --see-yield 0.5
+python -m repro.launch.pic_run --steps 2 --nc 256 --particles 4096 \
+    --domains 2 --async-n 2 --rebalance-every 2 --cell-order \
+    --collisions elastic,cx,coulomb

@@ -17,6 +17,7 @@ from __future__ import annotations
 import dataclasses
 
 from repro.core import pic
+from repro.core.collisions import CollisionConfig
 
 NC_GLOBAL = 102_400            # ~100K cells
 N_PER_SPECIES = 10_485_760     # ~10M macro-particles (x3 species = ~30M)
@@ -74,22 +75,75 @@ def make_bench_config(nc: int = 4096, n: int = 262_144,
 
 def make_see_config(nc: int = 4096, n: int = 262_144,
                     strategy: str = "unified", emission_yield: float = 0.5,
+                    emission_weight: float = 1.0,
                     diag_every: int = 1) -> pic.PICConfig:
     """Bounded-plasma variant: absorbing walls + secondary electron
     emission (electrons re-emit electrons — BIT1's signature plasma-wall
     source) on top of the ionization scenario. Runs single-domain or on
-    the async engine (the SEE injector shares the free-slot ring path)."""
+    the async engine (the SEE injector shares the free-slot ring path).
+    ``emission_weight`` sets the macro-weight of the secondaries (< 1 for
+    mixed-weight wall studies: many light secondaries per absorbed
+    primary's worth of charge)."""
     cfg = make_bench_config(nc=nc, n=n, strategy=strategy,
                             diag_every=diag_every)
     return dataclasses.replace(
         cfg, boundary="absorb", wall_emission=((0, 0),),
-        emission_yield=emission_yield, emission_vth=0.5)
+        emission_yield=emission_yield, emission_vth=0.5,
+        emission_weight=emission_weight)
+
+
+# the menu aliases the launcher's --collisions flag accepts
+COLLISION_MENU = ("elastic", "cx", "coulomb")
+
+
+def make_collision_menu(menu=COLLISION_MENU, *, rate_elastic: float = 2e-3,
+                        rate_cx: float = 2e-3, rate_coulomb: float = 1e-3
+                        ) -> tuple[CollisionConfig, ...]:
+    """The binary-collision menu over the (e-, D+, D) species triple:
+
+    * ``elastic`` — electron elastic scattering off the neutral background
+      (cell-binned density, speed-preserving isotropic rotation);
+    * ``cx`` — resonant D+ <-> D charge exchange (within-cell identity
+      swap, equal masses);
+    * ``coulomb`` — intra-species e-e Coulomb scattering (Takizuka–Abe
+      within-cell pairs, momentum/energy conserving).
+
+    Rates fold the cross-section physics into one coefficient each (see
+    ``collisions.CollisionConfig``); defaults give a few-percent collision
+    probability per step at the bench-scale densities.
+    """
+    out = []
+    for m in menu:
+        if m == "elastic":
+            out.append(CollisionConfig("elastic", 0, 2, rate_elastic))
+        elif m in ("cx", "charge_exchange"):
+            out.append(CollisionConfig("charge_exchange", 1, 2, rate_cx))
+        elif m == "coulomb":
+            out.append(CollisionConfig("coulomb", 0, None, rate_coulomb))
+        else:
+            raise ValueError(
+                f"unknown collision menu entry {m!r}; valid entries are "
+                f"{COLLISION_MENU + ('charge_exchange',)}")
+    return tuple(out)
+
+
+def make_collision_config(nc: int = 4096, n: int = 262_144,
+                          menu=COLLISION_MENU, strategy: str = "unified",
+                          diag_every: int = 1, **rates) -> pic.PICConfig:
+    """The ``collisions`` bench scenario: the full binary-collision menu on
+    the bench-scale (e-, D+, D) plasma with MC ionization OFF — isolates
+    the collide phase the way ``transport`` isolates migration."""
+    cfg = make_bench_config(nc=nc, n=n, strategy=strategy,
+                            diag_every=diag_every)
+    return dataclasses.replace(
+        cfg, ionization=None, collisions=make_collision_menu(menu, **rates))
 
 
 def make_engine_config(pic_cfg: pic.PICConfig | None = None, *,
                        async_n: int = 1, max_migration: int = 8192,
                        rebalance_every: int = 0, rebalance_skew: int = 0,
                        max_births: int = 8192, use_ring: bool = True,
+                       cell_order: bool = False,
                        axis_names: tuple[str, ...] = ("data",),
                        **bench_kw):
     """EngineConfig for the asynchronous multi-device engine, centralizing
@@ -99,7 +153,9 @@ def make_engine_config(pic_cfg: pic.PICConfig | None = None, *,
     per-species/direction/step send budget, ``max_births`` the analogous
     per-step ionization birth budget, ``rebalance_every`` the queue-adaptive
     re-split period (0 = off) and ``rebalance_skew`` the occupancy-skew
-    threshold that additionally triggers the re-split (0 = off).
+    threshold that additionally triggers the re-split (0 = off);
+    ``cell_order=True`` makes the rebalance a BIT1-style counting sort by
+    cell (per-cell ordering for the collide phase and deposit locality).
     ``use_ring=False`` selects the legacy full-capacity-scan merge (parity/
     debug only). With no ``pic_cfg`` the CPU-scale bench config is built
     from ``bench_kw`` (see ``make_bench_config``).
@@ -112,4 +168,4 @@ def make_engine_config(pic_cfg: pic.PICConfig | None = None, *,
         pic=pic_cfg, axis_names=axis_names, async_n=async_n,
         max_migration=max_migration, max_births=max_births,
         rebalance_every=rebalance_every, rebalance_skew=rebalance_skew,
-        use_ring=use_ring)
+        use_ring=use_ring, cell_order=cell_order)

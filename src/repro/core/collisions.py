@@ -24,19 +24,46 @@ physics cannot diverge between them:
   neutral slots into its ``FreeSlotRing`` and pop pre-claimed
   electron/ion slots with no full-capacity scan.
 
-Elastic e-n scattering (substrate): P = 1 - exp(-n_n R_el dt); the electron
-velocity is rotated to a uniformly random direction, preserving speed.
+Binary collisions (the per-cell substrate): the rest of BIT1's Monte-Carlo
+menu pairs particles INSIDE one grid cell — the data layout the paper's
+follow-on work (arXiv:2603.24508) builds its GPU collision throughput on.
+Three operators, all driven from a ``CollisionConfig`` menu and all built on
+the same cell-binned machinery (``cell_shuffled_order`` / ``pair_in_cells``
+/ ``particles.cell_bins``):
+
+* ``elastic_scatter`` — isotropic scattering off a per-cell partner
+  density, P = 1 - exp(-n_cell R dt); preserves each particle's speed;
+* ``charge_exchange`` — ion <-> neutral identity swap: an event ion trades
+  its velocity with a distinct random neutral of its own cell (the electron
+  hops; momentum and energy are exchanged exactly — equal masses enforced
+  by ``PICConfig``);
+* ``coulomb_intra`` — Takizuka–Abe-style intra-species pair scattering:
+  every within-cell pair deflects through a random small angle with
+  variance ``rate * n_cell * dt / |u|^3``; the symmetric update
+  ``v1 += du/2, v2 -= du/2`` conserves pair momentum exactly and kinetic
+  energy to rotation round-off (|u'| = |u|).
+
+Event draws and within-cell shuffles are indexed by OCCUPANCY RANK, not by
+slot: the k-th live row consumes the k-th stream element, so a stable
+reorder of the buffer (compaction, the engine's cell-order rebalance)
+cannot change any surviving particle's physics — the seed-parity contract
+``tests/test_collisions_physics.py`` pins.
+
+Collisions touch only velocities (never x / w / alive), so the distributed
+engine runs the same functions per queue with no free-slot-ring traffic.
 """
 
 from __future__ import annotations
 
-from typing import NamedTuple
+import dataclasses
+from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.grid import Grid1D, deposit_density, gather
-from repro.core.particles import SpeciesBuffer, inject_masked, kill, take
+from repro.core.particles import (SpeciesBuffer, cell_bins, inject_masked,
+                                  kill, take)
 
 Array = jax.Array
 
@@ -161,22 +188,348 @@ def ionize_packed(key: Array, neutrals: SpeciesBuffer, grid: Grid1D,
                      n_events=jnp.sum(hit.astype(jnp.int32)))
 
 
-def elastic_scatter(key: Array, sp: SpeciesBuffer, target_density: Array,
-                    grid: Grid1D, rate: float, dt: float) -> SpeciesBuffer:
-    """Isotropic elastic scattering off a background density field."""
-    kp, kd = jax.random.split(key)
-    nn_at = gather(grid, target_density, sp.x)
-    p = 1.0 - jnp.exp(-nn_at * rate * dt)
-    u = jax.random.uniform(kp, sp.x.shape, sp.x.dtype)
-    hit = sp.alive & (u < p)
+# ---- per-cell binary-collision substrate ------------------------------------
+
+
+COLLISION_KINDS = ("elastic", "charge_exchange", "coulomb")
+
+# diag key per kind (psum'd across domains by the engine)
+_KIND_DIAG = {"elastic": "coll_elastic", "charge_exchange": "coll_cx",
+              "coulomb": "coll_coulomb"}
+
+
+@dataclasses.dataclass(frozen=True)
+class CollisionConfig:
+    """One entry of the binary-collision menu.
+
+    ``kind`` selects the operator; ``species`` is the scattered species
+    (elastic), the ion (charge_exchange) or the self-colliding species
+    (coulomb); ``partner`` is the background/partner species (None for the
+    intra-species coulomb operator). ``rate`` folds the cross-section
+    physics into one coefficient: the event probability scale for
+    elastic/CX (P = 1 - exp(-n_cell rate dt)) and the T-A deflection
+    variance scale for coulomb (var = rate n_cell dt / |u|^3).
+    """
+
+    kind: str
+    species: int
+    partner: int | None = None
+    rate: float = 0.0
+
+
+def validate_menu(cfgs: Sequence[CollisionConfig], species) -> None:
+    """Static sanity of a collision menu against a species list (raises)."""
+    ns = len(species)
+    for cc in cfgs:
+        if cc.kind not in COLLISION_KINDS:
+            raise ValueError(f"unknown collision kind {cc.kind!r}; valid "
+                             f"kinds are {COLLISION_KINDS}")
+        if not 0 <= cc.species < ns:
+            raise ValueError(f"collision species index {cc.species} out of "
+                             f"range for {ns} species")
+        if cc.kind == "coulomb":
+            if cc.partner not in (None, cc.species):
+                raise ValueError(
+                    "coulomb is intra-species: partner must be None "
+                    f"(got {cc.partner})")
+        else:
+            if cc.partner is None or not 0 <= cc.partner < ns:
+                raise ValueError(f"{cc.kind} needs a partner species index, "
+                                 f"got {cc.partner}")
+            if cc.partner == cc.species:
+                raise ValueError(f"{cc.kind} partner must differ from the "
+                                 f"scattered species ({cc.species})")
+        if cc.kind == "charge_exchange":
+            if species[cc.species].mass != species[cc.partner].mass:
+                raise ValueError(
+                    "charge_exchange is an identity swap — it conserves "
+                    "momentum/energy only for equal masses, got "
+                    f"{species[cc.species].mass} vs "
+                    f"{species[cc.partner].mass}")
+        if cc.rate < 0.0:
+            raise ValueError(f"collision rate must be >= 0, got {cc.rate}")
+
+
+def involved_species(cfgs: Sequence[CollisionConfig]) -> tuple[int, ...]:
+    """Every species index a menu reads or writes."""
+    out: set[int] = set()
+    for cc in cfgs:
+        out.add(cc.species)
+        if cc.partner is not None:
+            out.add(cc.partner)
+    return tuple(sorted(out))
+
+
+def density_species(cfgs: Sequence[CollisionConfig]) -> tuple[int, ...]:
+    """Species whose per-cell density sets a menu's collision rates."""
+    return tuple(sorted(
+        {cc.species if cc.partner is None else cc.partner for cc in cfgs}))
+
+
+def _eligible(x: Array, alive: Array, length: float) -> Array:
+    """Rows that may collide: alive AND inside this domain — boundary
+    crossers awaiting migration collide on their new domain next step."""
+    return alive & (x >= 0.0) & (x < length)
+
+
+def _cells(x: Array, ok: Array, dx: float, nc: int) -> Array:
+    """Cell key per row; ineligible rows parked at the ``nc`` sentinel."""
+    c = jnp.clip(jnp.floor(x / dx).astype(jnp.int32), 0, nc - 1)
+    return jnp.where(ok, c, nc)
+
+
+def _rank_rows(ok: Array) -> Array:
+    """Occupancy rank of each row (the k-th ``ok`` row maps to k). Event
+    draws gather their entropy through this, so the k-th LIVE particle
+    reads the k-th stream element no matter where compaction or a
+    cell-order rebalance parked it."""
+    n = ok.shape[0]
+    return jnp.clip(jnp.cumsum(ok.astype(jnp.int32)) - 1, 0, n - 1)
+
+
+def _at_cell(n_cell: Array, c: Array) -> Array:
+    """Gather a (nc,) per-cell field at cell keys (0 at the nc sentinel)."""
+    padded = jnp.concatenate([n_cell, jnp.zeros((1,), n_cell.dtype)])
+    return padded[c]
+
+
+def cell_density(grid: Grid1D, buf: SpeciesBuffer) -> Array:
+    """Per-cell weighted density (nc,) — the cell-binned rate input.
+
+    Unlike the node-centred ``deposit_density``, cells are wholly owned by
+    one domain, so the collide phase needs NO halo exchange."""
+    ok = _eligible(buf.x, buf.alive, grid.length)
+    c = _cells(buf.x, ok, grid.dx, grid.nc)
+    w = jnp.where(ok, buf.w, 0.0)
+    hist = jnp.zeros((grid.nc + 1,), buf.x.dtype).at[c].add(w)
+    return hist[:grid.nc] / grid.dx
+
+
+def cell_shuffled_order(key: Array, cell: Array, ok: Array) -> Array:
+    """Permutation grouping rows by cell with RANDOM within-cell order
+    (ineligible rows at the tail). The shuffle keys are rank-indexed, so a
+    stable reorder of the buffer permutes the output without changing which
+    particles end up paired."""
+    n = cell.shape[0]
+    u = jax.random.uniform(key, (n,))[_rank_rows(ok)]
+    perm = jnp.argsort(u)                     # random permutation of rows
+    return perm[jnp.argsort(cell[perm], stable=True)]
+
+
+def pair_in_cells(key: Array, cell: Array, ok: Array
+                  ) -> tuple[Array, Array, Array]:
+    """Disjoint random within-cell pairs.
+
+    Returns (ia, ib, valid), each (cap,): position t of the cell-shuffled
+    order is a pair HEAD where ``valid`` — a row at an EVEN offset within
+    its own cell's segment whose successor (its partner ``ib[t]``) lies in
+    the same cell. Pairing by in-segment offset (not by global position)
+    means every cell forms exactly floor(count / 2) pairs no matter where
+    its segment happens to start, and an odd-count cell leaves exactly its
+    last row unpaired. Heads sit at even and partners at odd in-segment
+    offsets, so the pairs are disjoint by construction and the pair update
+    is write-conflict free."""
+    n = cell.shape[0]
+    order = cell_shuffled_order(key, cell, ok)
+    cs = cell[order]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    # in-segment offset from the sorted keys alone: distance to the running
+    # maximum of segment-boundary positions
+    boundary = jnp.concatenate(
+        [jnp.ones((1,), bool), cs[1:] != cs[:-1]])
+    seg_start = jax.lax.cummax(jnp.where(boundary, idx, 0))
+    local = idx - seg_start
+    succ = jnp.minimum(idx + 1, n - 1)
+    ia, ib = order, order[succ]
+    valid = ((local % 2 == 0) & (idx + 1 < n) & (cs[succ] == cs)
+             & ok[ia] & ok[ib])
+    return ia, ib, valid
+
+
+def elastic_scatter(key: Array, sp: SpeciesBuffer, n_cell: Array,
+                    grid: Grid1D, rate: float, dt: float
+                    ) -> tuple[SpeciesBuffer, Array]:
+    """Isotropic elastic scattering off a per-cell partner density.
+
+    ``n_cell`` (nc,) is the partner species' cell-binned density (see
+    ``cell_density``); P = 1 - exp(-n_cell rate dt) per eligible particle
+    per step; an event rotates the velocity to a uniform direction on the
+    sphere, preserving speed. All draws are occupancy-rank indexed (dead
+    rows consume no entropy — the seed-parity fix). Returns
+    (buffer, n_events)."""
+    kp, k1, k2 = jax.random.split(key, 3)
+    cap = sp.x.shape[0]
+    dtype = sp.x.dtype
+    ok = _eligible(sp.x, sp.alive, grid.length)
+    c = _cells(sp.x, ok, grid.dx, grid.nc)
+    rows = _rank_rows(ok)
+    p = -jnp.expm1(-_at_cell(n_cell, c).astype(dtype) * rate * dt)
+    u = jax.random.uniform(kp, (cap,), dtype)[rows]
+    hit = ok & (u < p)
 
     speed = jnp.linalg.norm(sp.v, axis=-1, keepdims=True)
-    # uniform direction on the sphere
-    k1, k2 = jax.random.split(kd)
-    cos_t = jax.random.uniform(k1, sp.x.shape, sp.x.dtype, -1.0, 1.0)
-    phi = jax.random.uniform(k2, sp.x.shape, sp.x.dtype, 0.0, 2.0 * jnp.pi)
+    cos_t = jax.random.uniform(k1, (cap,), dtype, -1.0, 1.0)[rows]
+    phi = jax.random.uniform(k2, (cap,), dtype, 0.0, 2.0 * jnp.pi)[rows]
     sin_t = jnp.sqrt(jnp.maximum(0.0, 1.0 - cos_t * cos_t))
     dirs = jnp.stack([cos_t, sin_t * jnp.cos(phi), sin_t * jnp.sin(phi)], -1)
-    v_new = speed * dirs
-    v = jnp.where(hit[:, None], v_new, sp.v)
-    return SpeciesBuffer(x=sp.x, v=v, w=sp.w, alive=sp.alive)
+    v = jnp.where(hit[:, None], speed * dirs, sp.v)
+    out = SpeciesBuffer(x=sp.x, v=v, w=sp.w, alive=sp.alive)
+    return out, jnp.sum(hit.astype(jnp.int32))
+
+
+def charge_exchange(key: Array, ions: SpeciesBuffer, neutrals: SpeciesBuffer,
+                    nn_cell: Array, grid: Grid1D, rate: float, dt: float
+                    ) -> tuple[SpeciesBuffer, SpeciesBuffer, Array]:
+    """Resonant charge exchange: within-cell ion <-> neutral identity swap.
+
+    Each eligible ion collides with P = 1 - exp(-n_n(cell) rate dt); the
+    r-th event ion of a cell swaps velocities with the r-th neutral of that
+    cell's randomly shuffled bin — a distinct partner per event (the swap
+    is a permutation, never a write conflict). The velocity rows move
+    intact, so per-pair momentum and energy are exchanged EXACTLY (equal
+    masses — validated by the config layer). Events beyond a cell's
+    queue-local neutral population are starved and retry next step, like
+    ``migration_overflow``. Returns (ions, neutrals, n_swapped)."""
+    kp, kn = jax.random.split(key)
+    cap_i, cap_n = ions.x.shape[0], neutrals.x.shape[0]
+    nc = grid.nc
+    dtype = ions.x.dtype
+
+    ok_i = _eligible(ions.x, ions.alive, grid.length)
+    c_i = _cells(ions.x, ok_i, grid.dx, nc)
+    p = -jnp.expm1(-_at_cell(nn_cell, c_i).astype(dtype) * rate * dt)
+    u = jax.random.uniform(kp, (cap_i,), dtype)[_rank_rows(ok_i)]
+    hit = ok_i & (u < p)
+
+    # the partner table: this buffer's neutrals, binned by cell in random
+    # within-cell order (the random sample the event ions draw from)
+    ok_n = _eligible(neutrals.x, neutrals.alive, grid.length)
+    c_n = _cells(neutrals.x, ok_n, grid.dx, nc)
+    n_order = cell_shuffled_order(kn, c_n, ok_n)
+    counts_n, starts_n = cell_bins(c_n, nc)
+
+    # enumerate the event ions per cell: in cell-sorted ion order, the rank
+    # of an event within its cell is its running event count minus the
+    # events of all earlier cells (one segmented gather off the bin table)
+    i_order = jnp.argsort(c_i, stable=True)
+    c_sort = c_i[i_order]
+    hit_sort = hit[i_order]
+    _, starts_h = cell_bins(jnp.where(hit, c_i, nc), nc)
+    rk = jnp.cumsum(hit_sort.astype(jnp.int32)) - 1 - starts_h[c_sort]
+    has = hit_sort & (rk < counts_n[c_sort])       # starved when bin is dry
+    ppos = jnp.where(has, starts_n[c_sort] + rk, cap_n)
+    partner = n_order[jnp.clip(ppos, 0, cap_n - 1)]
+
+    vi_rows = ions.v[i_order]
+    vn_rows = neutrals.v[partner]
+    iv = ions.v.at[jnp.where(has, i_order, cap_i)].set(vn_rows, mode="drop")
+    nv = neutrals.v.at[jnp.where(has, partner, cap_n)].set(
+        vi_rows, mode="drop")
+    n_swap = jnp.sum(has.astype(jnp.int32))
+    return (dataclasses.replace(ions, v=iv),
+            dataclasses.replace(neutrals, v=nv), n_swap)
+
+
+def ta_kick_ref(u: Array, delta: Array, phi: Array) -> Array:
+    """Reference Takizuka–Abe deflection of relative velocities.
+
+    ``u`` (M, 3) rotates through the scattering angle theta with
+    tan(theta/2) = ``delta`` about azimuth ``phi``; returns du = u' - u
+    with |u'| = |u| (the energy-conserving property the pair update leans
+    on). Mirrored bit-for-byte by the Pallas kernel in
+    ``kernels/collide.py`` (``ops.ta_kick``)."""
+    ux, uy, uz = u[..., 0], u[..., 1], u[..., 2]
+    d2 = delta * delta
+    cos_t = (1.0 - d2) / (1.0 + d2)
+    sin_t = 2.0 * delta / (1.0 + d2)
+    one_m = 1.0 - cos_t
+    uperp2 = ux * ux + uy * uy
+    uperp = jnp.sqrt(uperp2)
+    umag = jnp.sqrt(uperp2 + uz * uz)
+    cphi, sphi = jnp.cos(phi), jnp.sin(phi)
+    safe = uperp > 1e-12 * jnp.maximum(umag, 1.0)
+    up = jnp.where(safe, uperp, 1.0)
+    dux = (ux / up) * uz * sin_t * cphi - (uy / up) * umag * sin_t * sphi \
+        - ux * one_m
+    duy = (uy / up) * uz * sin_t * cphi + (ux / up) * umag * sin_t * sphi \
+        - uy * one_m
+    duz = -up * sin_t * cphi - uz * one_m
+    # u along z (uperp ~ 0): scatter out of the degenerate frame directly
+    dux0 = uz * sin_t * cphi
+    duy0 = uz * sin_t * sphi
+    duz0 = -uz * one_m
+    return jnp.stack([jnp.where(safe, dux, dux0),
+                      jnp.where(safe, duy, duy0),
+                      jnp.where(safe, duz, duz0)], axis=-1)
+
+
+def coulomb_intra(key: Array, sp: SpeciesBuffer, n_cell: Array, grid: Grid1D,
+                  rate: float, dt: float, use_kernel: bool = False
+                  ) -> tuple[SpeciesBuffer, Array]:
+    """Takizuka–Abe-style intra-species Coulomb scattering.
+
+    Every eligible within-cell pair (disjoint random pairing, see
+    ``pair_in_cells``) deflects its relative velocity u through a random
+    small angle: tan(theta/2) ~ N(0, rate * n_cell * dt / |u|^3) — the T-A
+    scaling with the physical constants (q^4 ln Lambda / 8 pi eps0^2 m^2)
+    folded into ``rate``. The symmetric half-kick ``v1 += du/2, v2 -= du/2``
+    conserves pair momentum exactly and kinetic energy to rotation
+    round-off. ``use_kernel`` routes the deflection through the Pallas
+    kernel (interpret mode off-TPU). Returns (buffer, n_pairs)."""
+    kp, kd, kf = jax.random.split(key, 3)
+    dtype = sp.x.dtype
+    ok = _eligible(sp.x, sp.alive, grid.length)
+    c = _cells(sp.x, ok, grid.dx, grid.nc)
+    ia, ib, valid = pair_in_cells(kp, c, ok)
+    m = ia.shape[0]
+
+    v1, v2 = sp.v[ia], sp.v[ib]
+    u = v1 - v2
+    umag = jnp.linalg.norm(u, axis=-1)
+    n_at = _at_cell(n_cell, c[ia]).astype(dtype)   # both rows share the cell
+    var = rate * n_at * dt / jnp.maximum(umag * umag * umag, 1e-12)
+    delta = jnp.sqrt(var) * jax.random.normal(kd, (m,), dtype)
+    phi = jax.random.uniform(kf, (m,), dtype, 0.0, 2.0 * jnp.pi)
+    if use_kernel:
+        from repro.kernels import ops                  # deferred: keep light
+        du = ops.ta_kick(u, delta, phi)
+    else:
+        du = ta_kick_ref(u, delta, phi)
+    du = jnp.where(valid[:, None], du, 0.0)
+    v = sp.v.at[ia].add(0.5 * du).at[ib].add(-0.5 * du)
+    return (dataclasses.replace(sp, v=v),
+            jnp.sum(valid.astype(jnp.int32)))
+
+
+def apply_menu(key: Array, bufs: dict[int, SpeciesBuffer],
+               cfgs: Sequence[CollisionConfig], dens: dict[int, Array],
+               grid: Grid1D, dt: float, use_kernel: bool = False
+               ) -> tuple[dict[int, SpeciesBuffer], dict]:
+    """Run a collision menu, in order, over a dict of species buffers.
+
+    ``bufs`` maps species index -> buffer: the FULL buffers on the
+    single-domain cycle, one queue's slices on the async engine — the same
+    code path either way, so the two cannot diverge. ``dens`` maps the
+    ``density_species`` of the menu to their (nc,) cell densities (computed
+    once per step from the whole domain — a queue pairs within its own
+    slice but collides at the full-domain rate). Returns (bufs, diag) with
+    per-kind event counters."""
+    diag: dict = {}
+    for cc in cfgs:
+        key, sub = jax.random.split(key)
+        if cc.kind == "elastic":
+            out, n = elastic_scatter(sub, bufs[cc.species], dens[cc.partner],
+                                     grid, cc.rate, dt)
+            bufs[cc.species] = out
+        elif cc.kind == "charge_exchange":
+            bi, bn, n = charge_exchange(sub, bufs[cc.species],
+                                        bufs[cc.partner], dens[cc.partner],
+                                        grid, cc.rate, dt)
+            bufs[cc.species], bufs[cc.partner] = bi, bn
+        else:
+            out, n = coulomb_intra(sub, bufs[cc.species], dens[cc.species],
+                                   grid, cc.rate, dt, use_kernel)
+            bufs[cc.species] = out
+        k = _KIND_DIAG[cc.kind]
+        diag[k] = diag.get(k, 0) + n
+    return bufs, diag

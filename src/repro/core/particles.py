@@ -168,6 +168,22 @@ def sort_by_cell(buf: SpeciesBuffer, dx: float, nc: int) -> SpeciesBuffer:
         x=buf.x[order], v=buf.v[order], w=buf.w[order], alive=buf.alive[order])
 
 
+def cell_bins(cell: Array, nc: int) -> tuple[Array, Array]:
+    """Bin table of a cell-key array (dead/ineligible rows keyed ``nc``).
+
+    Returns (counts, starts), both (nc + 1,): ``counts[c]`` rows carry key
+    ``c`` and, in any stable sort by ``cell``, cell ``c`` occupies positions
+    ``[starts[c], starts[c] + counts[c])`` — the segment boundaries the
+    per-cell collision pairing gathers through. ``starts[nc]`` is the total
+    live row count (the dead tail begins there). One scatter-add plus one
+    (nc + 1,)-sized cumsum: bin-table cost scales with the CELL count, never
+    with capacity."""
+    counts = jnp.zeros((nc + 1,), jnp.int32).at[cell].add(1, mode="drop")
+    starts = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)[:-1]])
+    return counts, starts
+
+
 def compact(buf: SpeciesBuffer) -> SpeciesBuffer:
     """Live particles first (stable). Cheap defragmentation."""
     order = jnp.argsort(~buf.alive, stable=True)

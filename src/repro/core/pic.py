@@ -78,6 +78,12 @@ class PICConfig:
     wall_emission: tuple[tuple[int, int], ...] = ()
     emission_yield: float = 0.0
     emission_vth: float = 1.0
+    emission_weight: float = 1.0       # macro-weight of emitted secondaries
+    # binary-collision menu (elastic / charge-exchange / Coulomb), applied
+    # after the push each step; collide_kernel routes the Takizuka–Abe pair
+    # deflection through the Pallas kernel (interpret mode off-TPU)
+    collisions: tuple[collisions.CollisionConfig, ...] = ()
+    collide_kernel: bool = False
     # compute the full-buffer diagnostics reductions (counts, kinetic/field
     # energy) only every k-th step; off-steps report zeros
     diag_every: int = 1
@@ -88,6 +94,8 @@ class PICConfig:
         object.__setattr__(self, "species", tuple(self.species))
         object.__setattr__(self, "wall_emission",
                            tuple(tuple(p) for p in self.wall_emission))
+        object.__setattr__(self, "collisions", tuple(self.collisions))
+        collisions.validate_menu(self.collisions, self.species)
         if self.strategy not in mover.STRATEGIES:
             raise ValueError(
                 f"unknown mover strategy {self.strategy!r}; valid strategies"
@@ -271,10 +279,27 @@ def step_fn(state: PICState, cfg: PICConfig) -> tuple[PICState, dict]:
     key = state.key
     species, hits, diag, new_rho = _push_all(state, cfg, e)
 
+    if cfg.collisions:
+        # collide right after the push (the engine's per-queue order): rates
+        # come from beginning-of-step cell densities, pairing and scattering
+        # act on the post-push velocities. Collisions touch only v — the
+        # carried rho (positions/weights) needs no correction.
+        key, sub = jax.random.split(key)
+        dens = {i: collisions.cell_density(grid, state.species[i])
+                for i in collisions.density_species(cfg.collisions)}
+        bufs = {i: species[i]
+                for i in collisions.involved_species(cfg.collisions)}
+        bufs, cdiag = collisions.apply_menu(sub, bufs, cfg.collisions, dens,
+                                            grid, cfg.dt, cfg.collide_kernel)
+        for i, b in bufs.items():
+            species[i] = b
+        diag.update(cdiag)
+
     if cfg.wall_emission and cfg.boundary == "absorb":
         from repro.core.boundaries import EmissionParams, wall_emission
         params = EmissionParams(yield_=cfg.emission_yield,
-                                vth_emit=cfg.emission_vth)
+                                vth_emit=cfg.emission_vth,
+                                weight=cfg.emission_weight)
         for primary, target in cfg.wall_emission:
             key, sub = jax.random.split(key)
             hl, hr = hits[primary]

@@ -29,10 +29,16 @@ MC sources (§3.3/SEE)  per-queue ``collisions.ionize_packed`` between push
                        and exchange (budgeted by ``max_births``); SEE off
                        the packed absorbed rows (``boundaries``); births
                        ride ``EngineState.pending``
+Binary collisions      the ``collide`` phase: per-queue
+(BIT1 MC menu)         ``collisions.apply_menu`` (cell-binned elastic /
+                       charge-exchange / Takizuka–Abe Coulomb) between push
+                       and the MC sources — velocities only, no ring traffic
 OpenMP dynamic         ``EngineConfig.rebalance_every`` (period) and
 scheduling             ``rebalance_skew`` (occupancy-skew trigger): compact
                        + interleaved re-split keeps per-queue occupancy
-                       even (``queue_occ`` / ``queue_skew`` diagnostics)
+                       even (``queue_occ`` / ``queue_skew`` diagnostics);
+                       ``cell_order=True`` makes the compact a counting sort
+                       by cell (BIT1-style per-cell ordering)
 MPI_Allgather (field)  eliminated: ``halo.py`` exchanges edge nodes with
                        ``ppermute`` and distributes the exact double-prefix
                        Poisson solve with scalar-only gathers

@@ -19,9 +19,12 @@ queue *k+1* runs the mover. The JAX mapping:
 
 The per-step phase order matches BIT1's cycle, with one JAX-native addition:
 ingest (scatter last step's arrivals + births, periodic/skew-triggered queue
-rebalance) -> halo field solve (see ``halo.py`` — no full-rho all_gather) ->
-per-queue fused push+deposit with in-queue MC sources -> per-queue migration
-exchange + SEE -> deferred merge -> diagnostics psum.
+rebalance — ``cell_order=True`` makes the rebalance a counting sort by cell)
+-> halo field solve (see ``halo.py`` — no full-rho all_gather) -> per-queue
+fused push+deposit -> per-queue binary collisions (the ``collide`` phase:
+cell-binned elastic / charge-exchange / Coulomb pairing inside the queue
+slice — velocities only, so no ring traffic) -> in-queue MC ionization ->
+per-queue migration exchange + SEE -> deferred merge -> diagnostics psum.
 
 Free-slot ring (the merge-phase fix): the seed merge re-discovered dead
 slots with one full-capacity ``free_slots`` scan per species per step, so
@@ -113,7 +116,7 @@ from repro.core.particles import (FreeSlotRing, SpeciesBuffer, StackedSpecies,
                                   init_uniform, inject_at, inject_masked,
                                   kill, kill_packed, ring_claim,
                                   ring_from_counts, ring_init, ring_push,
-                                  stack_species, take)
+                                  sort_by_cell, stack_species, take)
 from repro.core.pic import PICConfig, PICState
 from repro.core.pic import _carries_rho as pic_carries_rho
 from repro.distributed import halo
@@ -122,8 +125,11 @@ Array = jax.Array
 
 # cumulative phase checkpoints for the perf probes (see perf.py): a step
 # built with upto=<phase> executes the pipeline through that phase and
-# returns, so consecutive differences give per-phase wall times
-PHASES = ("ingest", "field", "push", "migrate", "merge", "full")
+# returns, so consecutive differences give per-phase wall times. ``collide``
+# (the per-queue binary-collision menu, between each queue's push and its
+# migration exchange) split out of the old fused ``collide_diag`` tail when
+# the collision substrate landed.
+PHASES = ("ingest", "field", "push", "collide", "migrate", "merge", "full")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -142,6 +148,17 @@ class EngineConfig:
     absorption/ionization churn. ``use_ring=False`` selects the legacy
     full-capacity-scan merge — a debug/parity mode only (the conservation
     suite pins it against the ring path on identical seeds).
+
+    ``cell_order=True`` is BIT1-style per-cell ordering: every rebalance
+    (periodic or skew-triggered) counting-sorts each capacity group by cell
+    instead of merely compacting it — live rows grouped by cell, dead rows
+    at the tail — and rebuilds the free-slot ring in the same pass. The
+    interleaved queue split of a cell-sorted buffer stripes every cell
+    evenly across the queues, so each queue's slice is both occupancy-even
+    AND a uniform sample of every cell: the per-queue cell bin tables the
+    collide phase builds stay balanced, within-cell pairing finds partners
+    in every queue, and deposits/gathers walk the grid monotonically (the
+    memory locality BIT1 gets from per-cell lists).
     """
     pic: PICConfig                       # cfg.nc == GLOBAL cell count
     axis_names: tuple[str, ...] = ("data",)
@@ -152,6 +169,7 @@ class EngineConfig:
     rebalance_skew: int = 0              # 0 = no skew-triggered re-split
     max_births: int = 2048               # ionization births per domain/step
     use_ring: bool = True                # False: legacy full-scan merge
+    cell_order: bool = False             # rebalance counting-sorts by cell
 
     def __post_init__(self):
         object.__setattr__(self, "axis_names", tuple(self.axis_names))
@@ -520,6 +538,23 @@ def _compact_group(st: StackedSpecies) -> tuple[StackedSpecies, Array]:
     return out, out.counts()
 
 
+def _cellsort_group(st: StackedSpecies, dx: float,
+                    nc: int) -> tuple[StackedSpecies, Array]:
+    """Per-species counting-sort by cell (``particles.sort_by_cell`` vmapped
+    over the group): live rows grouped by cell, dead rows at the tail —
+    which is also a valid compaction, so the ring rebuild
+    (``ring_from_counts``) and the occupancy-even queue split carry over
+    unchanged. The ``cell_order=True`` rebalance mode."""
+
+    def one(x, v, w, alive):
+        b = sort_by_cell(SpeciesBuffer(x=x, v=v, w=w, alive=alive), dx, nc)
+        return b.x, b.v, b.w, b.alive
+
+    x, v, w, alive = jax.vmap(one)(st.x, st.v, st.w, st.alive)
+    out = StackedSpecies(x=x, v=v, w=w, alive=alive)
+    return out, out.counts()
+
+
 def _state_specs(ecfg: EngineConfig, mesh: Mesh) -> EngineState:
     part = P(ecfg.axis_names)
     carried = _carries_rho(ecfg)
@@ -582,12 +617,24 @@ def make_engine_step(ecfg: EngineConfig, mesh: Mesh, *, upto: str = "full",
     ion = cfg.ionization
     see_pairs = _see_pairs(cfg)
     has_mc = ion is not None or bool(see_pairs)
+    coll = tuple(cfg.collisions)
     for i, sc in enumerate(cfg.species):
         cap_l = ecfg.local_cap(sc, mesh)
         if cap_l % n_q != 0:
             raise ValueError(
                 f"async_n ({n_q}) must divide the local capacity ({cap_l}) "
                 f"of species {sc.name!r}")
+    for cc in coll:
+        # a queue is one capacity group's slice: binary partners must ride
+        # the same queue, so every species of one menu entry must share a
+        # capacity group (single-domain runs have no such constraint)
+        parts = collisions.involved_species([cc])
+        if len({loc[i][0] for i in parts}) != 1:
+            names = [cfg.species[i].name for i in parts]
+            raise ValueError(
+                f"collision {cc.kind!r} pairs species {names} across "
+                f"capacity groups; give them equal capacities to run on "
+                f"the engine")
     axis_names = ecfg.axis_names
 
     def local_step(estate: EngineState):
@@ -642,9 +689,15 @@ def make_engine_step(ecfg: EngineConfig, mesh: Mesh, *, upto: str = "full",
                 trig = (state.step > 0) & (skew > skew_k)
                 reb_g = trig if reb_g is None else (reb_g | trig)
             if reb_g is not None:
+                # cell_order swaps the plain compaction for the BIT1-style
+                # counting sort by cell (dead rows still at the tail, so the
+                # ring rebuild is the same closed form)
+                sort_group = (
+                    (lambda s: _cellsort_group(s, cfg.dx, ncl))
+                    if ecfg.cell_order else _compact_group)
                 if use_ring:
                     def reb(op):
-                        new, counts = _compact_group(op[0])
+                        new, counts = sort_group(op[0])
                         return new, jax.vmap(
                             lambda c: ring_from_counts(c, cap_g))(counts)
 
@@ -652,7 +705,7 @@ def make_engine_step(ecfg: EngineConfig, mesh: Mesh, *, upto: str = "full",
                         reb_g, reb, lambda op: op, (st, rings[g]))
                 else:
                     st = jax.lax.cond(
-                        reb_g, lambda s: _compact_group(s)[0],
+                        reb_g, lambda s: sort_group(s)[0],
                         lambda s: s, st)
             write_back(idxs, st)
         empty_pend = [
@@ -707,7 +760,8 @@ def make_engine_step(ecfg: EngineConfig, mesh: Mesh, *, upto: str = "full",
                 axis_names, mesh, is_first, is_last)
         if see_pairs:
             eparams = boundaries.EmissionParams(
-                yield_=cfg.emission_yield, vth_emit=cfg.emission_vth)
+                yield_=cfg.emission_yield, vth_emit=cfg.emission_vth,
+                weight=cfg.emission_weight)
         if has_mc:
             key, k_mc = jax.random.split(key)
             k_mc = jax.random.fold_in(k_mc, r)
@@ -717,6 +771,20 @@ def make_engine_step(ecfg: EngineConfig, mesh: Mesh, *, upto: str = "full",
                 see_keys = jax.random.split(
                     k_see, len(see_pairs) * n_q).reshape(
                     (len(see_pairs), n_q, -1))
+
+        # ---- collide inputs: per-cell rate densities from the full local
+        #      buffers (cells are wholly domain-owned — no halo needed) and
+        #      per-queue event keys. A queue pairs within its own slice but
+        #      collides at the full-domain rate ----
+        coll_dens = None
+        coll_keys = None
+        if coll:
+            coll_dens = {
+                i: collisions.cell_density(grid_local, species[i])
+                for i in collisions.density_species(coll)}
+            key, k_coll = jax.random.split(key)
+            k_coll = jax.random.fold_in(k_coll, r)
+            coll_keys = jax.random.split(k_coll, n_q)
 
         # ---- async(n) pipeline: push queue k, run its MC sources, issue
         #      its migration collective, then push queue k+1 while k's
@@ -750,6 +818,35 @@ def make_engine_step(ecfg: EngineConfig, mesh: Mesh, *, upto: str = "full",
                     if carried:
                         rho_acc = rho_push      # keep the in-pass deposit
                     kept_qs.append(out)         # live in the probe output
+                    continue
+
+                # ---- binary collisions on this queue (before the MC
+                #      sources and the exchange): the menu runs on the
+                #      queue's own slices through the SAME apply_menu the
+                #      single-domain cycle uses. Collisions touch only
+                #      velocities — no alive-mask change, hence no ring
+                #      traffic and no carried-rho correction ----
+                g_coll = [cc for cc in coll if loc[cc.species][0] == g]
+                if g_coll:
+                    rows_c = collisions.involved_species(g_coll)
+                    cbufs = {i: SpeciesBuffer(
+                        x=out.x[idxs.index(i)], v=out.v[idxs.index(i)],
+                        w=out.w[idxs.index(i)], alive=out.alive[idxs.index(i)])
+                        for i in rows_c}
+                    cbufs, cdiag = collisions.apply_menu(
+                        jax.random.fold_in(coll_keys[k_q], g), cbufs, g_coll,
+                        coll_dens, grid_local, cfg.dt, cfg.collide_kernel)
+                    for i, cb in cbufs.items():
+                        j = idxs.index(i)
+                        out = StackedSpecies(
+                            x=out.x, v=out.v.at[j].set(cb.v), w=out.w,
+                            alive=out.alive)
+                    for ck, cv in cdiag.items():
+                        dacc(None, ck, cv)
+                if upto == "collide":
+                    if carried:
+                        rho_acc = rho_push
+                    kept_qs.append(out)
                     continue
 
                 # ---- MC ionization on this queue (before the exchange, so
@@ -867,7 +964,7 @@ def make_engine_step(ecfg: EngineConfig, mesh: Mesh, *, upto: str = "full",
                         dacc(sc.name, k, v[j])
             staged.append((idxs, charges, kept_qs, pending_packs))
 
-        if upto in ("push", "migrate"):
+        if upto in ("push", "collide", "migrate"):
             aux = e
             for idxs, _, kept_qs, pending_packs in staged:
                 write_back(idxs, _merge_queues(kept_qs, n_q))

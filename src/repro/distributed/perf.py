@@ -33,8 +33,12 @@ import jax
 
 from repro.distributed import engine as engine_mod
 
-# per-phase labels derived from consecutive engine.PHASES checkpoints
-PHASE_LABELS = ("ingest", "field", "push", "migrate", "merge", "collide_diag")
+# per-phase labels derived from consecutive engine.PHASES checkpoints; the
+# binary-collision menu split ``collide`` out of the old fused
+# ``collide_diag`` tail — what remains after the merge is the diagnostics
+# reduction alone
+PHASE_LABELS = ("ingest", "field", "push", "collide", "migrate", "merge",
+                "diag")
 
 
 def _time_fn(fn, *args, warmup: int = 1, iters: int = 3) -> float:
@@ -52,8 +56,8 @@ def _time_fn(fn, *args, warmup: int = 1, iters: int = 3) -> float:
 
 def phase_breakdown(ecfg, mesh, *, iters: int = 3, warmup: int = 1,
                     seed: int = 0, state=None) -> dict[str, float]:
-    """Per-phase step times (µs): field / push / migrate / merge /
-    collide_diag, plus the end-to-end ``total``.
+    """Per-phase step times (µs): field / push / collide / migrate / merge /
+    diag, plus the end-to-end ``total``.
 
     Probes are undonated and re-fed the same state, so the breakdown can run
     on a live state without invalidating it.

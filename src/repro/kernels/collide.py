@@ -1,0 +1,90 @@
+"""Pallas TPU kernel: the Takizuka–Abe pair-deflection of the collide phase.
+
+The per-cell binary-collision substrate (``core/collisions.py``) splits into
+two halves: the PAIRING (cell-shuffled order + segmented gathers — data-
+dependent addressing that belongs to XLA) and the PAIR UPDATE — a purely
+elementwise rotation of each pair's relative velocity through a sampled
+scattering angle. The update is the arithmetically dense half (rsqrt,
+trig, a 3-vector rotation per pair) and maps onto the VPU exactly like the
+fused-cycle Boris rotation: this kernel streams the pair rows through VMEM
+as (rows, 128) planes, tile by tile, and emits the deflection du = u' - u
+with |u'| = |u| — the energy-conserving property the caller's symmetric
+half-kick (v1 += du/2, v2 -= du/2) leans on.
+
+Layout contract (see ``core/particles.py``): ux/uy/uz (relative velocity
+components), delta (tan of the half scattering angle) and phi (azimuth)
+each arrive as their own (rows, LANES) plane; pad rows carry delta == 0, so
+they deflect by exactly zero. Off-TPU the kernel runs in interpret mode
+(the validation mode for this container); the jnp reference lives in
+``collisions.ta_kick_ref`` and the two are parity-pinned in
+``tests/test_collisions_physics.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+LANES = 128
+
+
+def _ta_kernel(ux_ref, uy_ref, uz_ref, delta_ref, phi_ref,
+               dux_ref, duy_ref, duz_ref):
+    ux, uy, uz = ux_ref[...], uy_ref[...], uz_ref[...]
+    delta, phi = delta_ref[...], phi_ref[...]
+
+    d2 = delta * delta
+    inv = 1.0 / (1.0 + d2)
+    cos_t = (1.0 - d2) * inv
+    sin_t = 2.0 * delta * inv
+    one_m = 1.0 - cos_t
+    uperp2 = ux * ux + uy * uy
+    uperp = jnp.sqrt(uperp2)
+    umag = jnp.sqrt(uperp2 + uz * uz)
+    cphi, sphi = jnp.cos(phi), jnp.sin(phi)
+
+    safe = uperp > 1e-12 * jnp.maximum(umag, 1.0)
+    up = jnp.where(safe, uperp, 1.0)
+    dux = (ux / up) * uz * sin_t * cphi - (uy / up) * umag * sin_t * sphi \
+        - ux * one_m
+    duy = (uy / up) * uz * sin_t * cphi + (ux / up) * umag * sin_t * sphi \
+        - uy * one_m
+    duz = -up * sin_t * cphi - uz * one_m
+    # degenerate frame (u along z): scatter straight off the z axis
+    dux0 = uz * sin_t * cphi
+    duy0 = uz * sin_t * sphi
+    duz0 = -uz * one_m
+
+    dux_ref[...] = jnp.where(safe, dux, dux0)
+    duy_ref[...] = jnp.where(safe, duy, duy0)
+    duz_ref[...] = jnp.where(safe, duz, duz0)
+
+
+def ta_kick_pallas(ux: Array, uy: Array, uz: Array, delta: Array, phi: Array,
+                   *, tile_rows: int = 8, interpret: bool = True
+                   ) -> tuple[Array, Array, Array]:
+    """Launch the pair-deflection kernel. All inputs are (rows, 128) planes.
+
+    Returns (dux, duy, duz) planes, same shape — the T-A deflection of each
+    pair's relative velocity.
+    """
+    rows = ux.shape[0]
+    assert rows % tile_rows == 0, (rows, tile_rows)
+    grid = (rows // tile_rows,)
+    tile = pl.BlockSpec((tile_rows, LANES), lambda r: (r, 0))
+
+    kernel = functools.partial(_ta_kernel)
+    out_shape = [jax.ShapeDtypeStruct((rows, LANES), ux.dtype)] * 3
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[tile] * 5,
+        out_specs=[tile] * 3,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(ux, uy, uz, delta, phi)

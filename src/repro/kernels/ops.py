@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.particles import LANES, from_planes, plane_pad, to_planes
+from repro.kernels import collide as _collide
 from repro.kernels import deposit as _deposit
 from repro.kernels import fused_cycle as _fused
 from repro.kernels import mover as _mover
@@ -106,6 +107,27 @@ def fused_push_deposit(x: Array, v: Array, alive: Array, w: Array, e: Array,
         rho_out = rho_carry + rho_out
     return (unpad(xn), v_out, unpad(an) > 0.5, unpad(hl) > 0.5,
             unpad(hr) > 0.5, unpad(wn), rho_out)
+
+
+@partial(jax.jit, static_argnames=("tile_rows",))
+def ta_kick(u: Array, delta: Array, phi: Array, *,
+            tile_rows: int = 8) -> Array:
+    """Takizuka–Abe pair deflection (kernels/collide.py).
+
+    ``u`` (M, 3) are pair relative velocities, ``delta`` (M,) the sampled
+    tan(theta/2), ``phi`` (M,) the azimuths; returns du (M, 3) with
+    |u + du| = |u|. Pad rows enter with delta == 0 and deflect by exactly
+    zero. The jnp reference is ``collisions.ta_kick_ref`` (parity-pinned).
+    """
+    m = u.shape[0]
+    up = [to_planes(u[:, i], tile_rows) for i in range(3)]
+    dp = to_planes(delta, tile_rows)
+    pp = to_planes(phi, tile_rows)
+    dux, duy, duz = _collide.ta_kick_pallas(
+        up[0], up[1], up[2], dp, pp, tile_rows=tile_rows,
+        interpret=_interpret())
+    return jnp.stack([from_planes(dux, m), from_planes(duy, m),
+                      from_planes(duz, m)], axis=-1)
 
 
 @partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k"))

@@ -2,7 +2,8 @@
 
     PYTHONPATH=src python -m repro.launch.pic_run --steps 100 \
         [--domains 4] [--async-n 2] [--rebalance-every K] \
-        [--rebalance-skew T] [--max-births N] [--see-yield Y] \
+        [--rebalance-skew T] [--cell-order] [--max-births N] \
+        [--see-yield Y] [--collisions elastic,cx,coulomb] \
         [--strategy unified|explicit|async_batched|fused] \
         [--field-solve] [--diag-every K] [--phases]
 
@@ -16,7 +17,11 @@ per-queue occupancy skew exceeds T. The scenario's MC ionization runs on
 the same queue pipeline through the free-slot ring (--max-births bounds
 births per step, like max_migration bounds sends); --see-yield Y switches
 the walls to absorbing and re-emits secondary electrons with yield Y
-(BIT1's plasma-wall SEE source, also ring-routed). If the process exposes
+(BIT1's plasma-wall SEE source, also ring-routed). --collisions turns on
+the binary-collision menu (any comma list of elastic, cx, coulomb): the
+per-cell collide phase runs between each queue's push and its migration
+exchange; --cell-order makes the rebalance a BIT1-style counting sort by
+cell so the queue slices stay cell-striped. If the process exposes
 fewer jax devices than --domains, emulated host devices are requested via
 XLA_FLAGS before jax initializes (a TPU slice provides real ones
 natively). --phases prints the per-phase timing breakdown.
@@ -50,6 +55,12 @@ def main() -> None:
     ap.add_argument("--see-yield", type=float, default=0.0,
                     help="enable absorbing walls + secondary electron "
                          "emission with this yield (0 = off)")
+    ap.add_argument("--collisions", default="",
+                    help="comma list from {elastic, cx, coulomb}: enable "
+                         "the per-cell binary-collision menu")
+    ap.add_argument("--cell-order", action="store_true",
+                    help="rebalance by counting sort by cell (BIT1-style "
+                         "per-cell ordering) instead of plain compaction")
     ap.add_argument("--strategy", default="unified",
                     choices=["unified", "explicit", "async_batched",
                              "fused"])
@@ -75,8 +86,9 @@ def main() -> None:
     import jax
     import numpy as np
 
-    from repro.configs.pic_bit1 import (make_bench_config, make_engine_config,
-                                        make_see_config)
+    from repro.configs.pic_bit1 import (make_bench_config,
+                                        make_collision_menu,
+                                        make_engine_config, make_see_config)
     from repro.core import pic
     from repro.distributed import engine, perf
     from repro.launch.mesh import make_debug_mesh
@@ -92,10 +104,15 @@ def main() -> None:
                                 diag_every=args.diag_every)
     if args.field_solve:
         cfg = dataclasses.replace(cfg, field_solve=True)
+    if args.collisions:
+        menu = tuple(m for m in args.collisions.split(",") if m)
+        cfg = dataclasses.replace(cfg,
+                                  collisions=make_collision_menu(menu))
     t0 = time.perf_counter()
     mesh = ecfg = None
     if (args.domains == 1 and args.async_n == 1
-            and args.rebalance_every == 0 and args.rebalance_skew == 0):
+            and args.rebalance_every == 0 and args.rebalance_skew == 0
+            and not args.cell_order):
         state = pic.init_state(cfg, 0)
         final, diags = jax.block_until_ready(
             jax.jit(lambda s: pic.run(cfg, args.steps, state=s))(state))
@@ -103,6 +120,10 @@ def main() -> None:
         # --diag-every K the trace holds zeros on off-steps
         counts = {f"{sc.name}/count": int(buf.count())
                   for sc, buf in zip(cfg.species, final.species)}
+        colls = {k: int(np.asarray(v).sum()) for k, v in diags.items()
+                 if k.startswith("coll_")}
+        if colls:
+            print("collisions (total):", colls)
         balance = {}
     else:
         mesh = make_debug_mesh(data=args.domains, model=1)
@@ -110,7 +131,8 @@ def main() -> None:
                                   async_n=args.async_n,
                                   max_births=args.max_births,
                                   rebalance_every=args.rebalance_every,
-                                  rebalance_skew=args.rebalance_skew)
+                                  rebalance_skew=args.rebalance_skew,
+                                  cell_order=args.cell_order)
         state = engine.init_engine_state(ecfg, mesh, 0)
         step = engine.make_engine_step(ecfg, mesh)
         for _ in range(args.steps):
@@ -120,6 +142,7 @@ def main() -> None:
                   if k.endswith("/count")}
         sources = {k: int(np.asarray(v)) for k, v in diag.items()
                    if k in ("n_ionized", "birth_overflow")
+                   or k.startswith("coll_")
                    or k.endswith(("/emitted", "/emission_overflow"))}
         if sources:
             print("mc sources (last step):", sources)

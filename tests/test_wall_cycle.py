@@ -44,9 +44,9 @@ def test_elastic_scatter_preserves_speed_and_count():
     key = jax.random.PRNGKey(0)
     g = Grid1D(nc=64, dx=1.0)
     buf = init_uniform(key, 2048, 2048, g.length, vth=1.0)
-    density = jnp.full((g.ng,), 5.0)
-    out = collisions.elastic_scatter(jax.random.PRNGKey(1), buf, density, g,
-                                     rate=0.5, dt=1.0)
+    density = jnp.full((g.nc,), 5.0)       # per-cell partner density
+    out, n_events = collisions.elastic_scatter(
+        jax.random.PRNGKey(1), buf, density, g, rate=0.5, dt=1.0)
     assert int(out.count()) == 2048
     np.testing.assert_allclose(
         np.asarray(jnp.linalg.norm(out.v, axis=-1)),
@@ -54,15 +54,16 @@ def test_elastic_scatter_preserves_speed_and_count():
     # with P = 1 - exp(-5*0.5) ~ 0.92, most velocities changed direction
     changed = (np.abs(np.asarray(out.v - buf.v)) > 1e-6).any(axis=1)
     assert changed.mean() > 0.7
+    assert int(n_events) == changed.sum()
 
 
 def test_elastic_scatter_isotropy():
     key = jax.random.PRNGKey(5)
     g = Grid1D(nc=16, dx=1.0)
     buf = init_uniform(key, 8192, 8192, g.length, vth=1.0)
-    density = jnp.full((g.ng,), 100.0)     # P ~ 1: everyone scatters
-    out = collisions.elastic_scatter(jax.random.PRNGKey(6), buf, density, g,
-                                     rate=1.0, dt=1.0)
+    density = jnp.full((g.nc,), 100.0)     # P ~ 1: everyone scatters
+    out, _ = collisions.elastic_scatter(
+        jax.random.PRNGKey(6), buf, density, g, rate=1.0, dt=1.0)
     dirs = np.asarray(out.v) / np.linalg.norm(np.asarray(out.v), axis=1,
                                               keepdims=True)
     # isotropic: each direction cosine has mean ~0, var ~1/3
