@@ -71,10 +71,10 @@ ecfg = make_engine_config(cfg, max_migration=p["m"], async_n=p["async_n"],
                           max_births=p["max_births"],
                           rebalance_every=reb,
                           cell_order=(p["scenario"] == "collisions"))
-phases = perf.phase_breakdown(ecfg, mesh, iters=p["iters"], warmup=1)
+probe = perf.phase_breakdown(ecfg, mesh, iters=p["iters"], warmup=1)
 queues = perf.queue_stats(ecfg, mesh, steps=3)
 print("RESULTJSON " + json.dumps({
-    "phases": phases, "queues": queues,
+    "probe": probe, "queues": queues,
     "engine": {"rebalance_every": ecfg.rebalance_every,
                "cell_order": ecfg.cell_order}}))
 """
@@ -115,7 +115,7 @@ def sweep(domains=(1, 2, 4, 8), *, nc: int = 4096, n: int = 131_072,
                        rebalance_every=rebalance_every, scenario=scenario,
                        max_births=max_births)
         if res is not None:
-            per_domain[d] = res["phases"]
+            per_domain[d] = res["probe"]
             per_domain_queues[d] = res["queues"]
             engine_knobs = res["engine"]
     if not per_domain:
@@ -143,7 +143,7 @@ def sweep(domains=(1, 2, 4, 8), *, nc: int = 4096, n: int = 131_072,
         m = metrics[d]
         rows.append(
             f"engine_step/{scenario};domains={d};async_n={async_n},"
-            f"{m['phases']['total']:.1f},"
+            f"{m['total']:.1f},"
             f"speedup={m['speedup']:.2f};pe="
             f"{m['parallel_efficiency']:.2f}")
     return rows, payload
@@ -172,12 +172,15 @@ def run(domains=(1, 2, 4, 8), *, json_path: str = "BENCH_scaling.json",
 def smoke(json_path: str = "BENCH_scaling.json",
           scenario: str = "all") -> list[str]:
     """CI-sized scaling sweep at the acceptance point: small grid,
-    D in {1, 2, 4}, async_n=4, 2 iters — by default all three scenarios:
+    D in {1, 2, 4}, async_n=4 — by default all three scenarios:
     transport, the §3.3 MC-ionization workload (the ring-routed source)
-    and the binary-collision menu on the per-cell substrate. The single
-    definition of the CI smoke point: the CLI ``--smoke`` flag and
-    ``benchmarks.run --smoke`` both land here."""
-    return run((1, 2, 4), nc=512, n=16_384, async_n=4, iters=2,
+    and the binary-collision menu on the per-cell substrate. 5 timing
+    iters per probe: at 2 the cumulative differencing was dominated by
+    recompile/host noise (the committed breakdown once reported a merge
+    phase larger than the total). The single definition of the CI smoke
+    point: the CLI ``--smoke`` flag and ``benchmarks.run --smoke`` both
+    land here."""
+    return run((1, 2, 4), nc=512, n=16_384, async_n=4, iters=5,
                max_migration=2048, max_births=2048, json_path=json_path,
                mode="smoke", scenario=scenario)
 

@@ -11,23 +11,26 @@
 The mover-strategy results are also written as machine-readable JSON
 (default ``BENCH_mover.json``) so successive PRs accumulate a perf
 trajectory, and the distributed-engine scaling sweep writes per-phase
-times + speedup/PE to ``BENCH_scaling.json``. ``--smoke`` runs the mover
-benchmark at a reduced size plus a small scaling sweep (the CI
-configuration, see ``scripts/ci.sh``).
+times + speedup/PE to ``BENCH_scaling.json``; both artifacts are written
+atomically (temp file + rename) so an interrupted run never truncates a
+committed trajectory. ``--smoke`` runs the mover benchmark at a reduced
+size plus a small scaling sweep (the CI configuration, see
+``scripts/ci.sh``); ``--profile-dir DIR`` captures a jax profiler trace
+of the in-process benchmark work (the engine's named phase scopes appear
+as Perfetto/TensorBoard ranges).
 """
 
 from __future__ import annotations
 
 import argparse
-import json
 import sys
 import traceback
 
 
 def _write_json(path: str, results: dict) -> None:
-    with open(path, "w") as fh:
-        json.dump(results, fh, indent=2, sort_keys=True)
-        fh.write("\n")
+    from repro.obs import atomic_write_json
+
+    atomic_write_json(path, results)
     print(f"# wrote {path}", file=sys.stderr)
 
 
@@ -39,14 +42,20 @@ def main() -> None:
                     help="where to write the mover-strategy results")
     ap.add_argument("--scaling-json", default="BENCH_scaling.json",
                     help="where to write the engine scaling results")
+    ap.add_argument("--profile-dir", default="",
+                    help="capture a jax profiler trace of the in-process "
+                         "benchmark work into this directory")
     args = ap.parse_args()
+
+    from repro.obs import tracing
 
     from benchmarks import bench_mover_strategies
 
     print("name,us_per_call,derived")
     if args.smoke:
-        rows, results = bench_mover_strategies.bench(n=65_536, nc=1_024,
-                                                     iters=3)
+        with tracing.trace_session(args.profile_dir or None):
+            rows, results = bench_mover_strategies.bench(n=65_536, nc=1_024,
+                                                         iters=3)
         for r in rows:
             print(f"smoke_strategies/{r}", flush=True)
         results["mode"] = "smoke"
@@ -66,20 +75,23 @@ def main() -> None:
         ("lm_substrate", bench_lm),
     ]
     failed = False
-    for tag, mod in modules:
-        try:
-            if mod is bench_mover_strategies:
-                rows, results = mod.bench()
-                results["mode"] = "full"
-                _write_json(args.json, results)
-            else:
-                rows = mod.main()
-            for r in rows:
-                print(f"{tag}/{r}", flush=True)
-        except Exception:
-            failed = True
-            print(f"{tag}/ERROR,,", flush=True)
-            traceback.print_exc(file=sys.stderr)
+    # the trace captures the in-process benchmarks; the scaling sweep runs
+    # its measurements in subprocesses, which a host trace cannot see
+    with tracing.trace_session(args.profile_dir or None):
+        for tag, mod in modules:
+            try:
+                if mod is bench_mover_strategies:
+                    rows, results = mod.bench()
+                    results["mode"] = "full"
+                    _write_json(args.json, results)
+                else:
+                    rows = mod.main()
+                for r in rows:
+                    print(f"{tag}/{r}", flush=True)
+            except Exception:
+                failed = True
+                print(f"{tag}/ERROR,,", flush=True)
+                traceback.print_exc(file=sys.stderr)
     if failed:
         raise SystemExit(1)
 

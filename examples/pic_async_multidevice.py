@@ -97,11 +97,14 @@ def main() -> None:
     assert ok, "conservation FAILED"
     print("conservation PASSED")
 
-    phases = perf.phase_breakdown(ecfg, mesh, iters=3, warmup=1)
+    probe = perf.phase_breakdown(ecfg, mesh, iters=3, warmup=1)
+    phases = dict(probe["phases"], total=probe["total"])
     width = max(len(k) for k in phases)
     print("per-phase breakdown (us/step):")
     for k, v in phases.items():
         print(f"  {k:<{width}} {v:10.1f}")
+    for flag in probe["flags"]:
+        print("  probe flag:", flag)
 
 
 if __name__ == "__main__":

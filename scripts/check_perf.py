@@ -1,0 +1,181 @@
+#!/usr/bin/env python
+"""Perf-regression gate over the committed BENCH_* trajectory files.
+
+Two jobs, run by the CI perf lane (``scripts/ci.sh``):
+
+1. **Structural validation** of a ``BENCH_scaling.json`` payload — the
+   contract the observability rework restored: every derived phase is
+   >= 0 and <= total, the phases sum to the total, the raw cumulative
+   probes carry ordered min/median/max bounds, and speedup / parallel
+   efficiency are finite and positive. (The pre-rework artifact shipped a
+   merge phase ~2x larger than its own total and a silently zero-clamped
+   push — exactly what this check rejects.)
+
+2. **Regression comparison** of a freshly measured smoke payload against
+   the committed one, with tolerance bands. The container's 2-core host
+   devices measure harness overhead, not hardware, so the bands are wide
+   (default 8x on step totals) — the gate catches order-of-magnitude
+   regressions (an accidentally serialized pipeline, a re-introduced
+   full-capacity scan), not percent-level drift. ``BENCH_mover.json`` is
+   compared on the dimensionless ``full_cycle.speedup`` (fused vs two-pass
+   on the same host), which is size-independent and far more stable than
+   absolute times.
+
+Usage (all parts optional — whatever is passed is checked)::
+
+    python scripts/check_perf.py \
+        --scaling-baseline BENCH_scaling.json \
+        [--scaling-fresh BENCH_scaling.fresh.json] [--tolerance 8.0] \
+        [--mover-baseline BENCH_mover.json] \
+        [--mover-fresh BENCH_mover.fresh.json] [--mover-band 4.0]
+
+Exit status 0 = every check passed; 1 = failures (listed on stderr).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+
+PHASE_LABELS = ("ingest", "field", "push", "collide", "migrate", "merge",
+                "diag")
+REL_EPS = 1e-6      # float tolerance for sum(phases) == total
+
+
+def _finite_pos(x) -> bool:
+    return isinstance(x, (int, float)) and math.isfinite(x) and x > 0
+
+
+def check_scaling_structure(payload: dict, name: str = "scaling"
+                            ) -> list[str]:
+    """Internal-consistency errors of one BENCH_scaling.json payload."""
+    errs: list[str] = []
+    scenarios = payload.get("scenarios")
+    if not isinstance(scenarios, dict) or not scenarios:
+        return [f"{name}: no scenarios"]
+    for sc_name, sc in scenarios.items():
+        domains = sc.get("domains", {})
+        if not domains:
+            errs.append(f"{name}:{sc_name}: no domains")
+        for d, m in domains.items():
+            where = f"{name}:{sc_name}:D={d}"
+            phases = m.get("phases", {})
+            total = m.get("total")
+            missing = [p for p in PHASE_LABELS if p not in phases]
+            if missing:
+                errs.append(f"{where}: missing phases {missing}")
+                continue
+            if not _finite_pos(total):
+                errs.append(f"{where}: total {total!r} not finite/positive")
+                continue
+            tol = REL_EPS * total
+            for p in PHASE_LABELS:
+                v = phases[p]
+                if not (isinstance(v, (int, float)) and math.isfinite(v)
+                        and v >= -tol):
+                    errs.append(f"{where}: phase {p} = {v!r} negative or "
+                                f"non-finite")
+                elif v > total + tol:
+                    errs.append(f"{where}: phase {p} = {v:.1f}us exceeds "
+                                f"total {total:.1f}us")
+            ssum = sum(phases[p] for p in PHASE_LABELS)
+            if abs(ssum - total) > max(tol, 1e-3):
+                errs.append(f"{where}: phases sum to {ssum:.1f}us, "
+                            f"total is {total:.1f}us")
+            cum = m.get("cumulative_us", {})
+            if not cum:
+                errs.append(f"{where}: missing cumulative_us probes")
+            for ck, cv in cum.items():
+                lo, med, hi = (cv.get("min"), cv.get("median"), cv.get("max"))
+                if not all(isinstance(x, (int, float)) and math.isfinite(x)
+                           for x in (lo, med, hi)) or not lo <= med <= hi:
+                    errs.append(f"{where}: cumulative[{ck}] bounds "
+                                f"{lo!r}/{med!r}/{hi!r} not ordered")
+            for key in ("speedup", "parallel_efficiency"):
+                if not _finite_pos(m.get(key)):
+                    errs.append(f"{where}: {key} = {m.get(key)!r} not "
+                                f"finite/positive")
+    return errs
+
+
+def compare_scaling(baseline: dict, fresh: dict,
+                    tolerance: float) -> list[str]:
+    """Regressions of fresh step totals vs the committed ones."""
+    errs: list[str] = []
+    if baseline.get("mode") != fresh.get("mode"):
+        return [f"mode mismatch: baseline {baseline.get('mode')!r} vs "
+                f"fresh {fresh.get('mode')!r} — only same-mode payloads "
+                f"are comparable"]
+    base_sc = baseline.get("scenarios", {})
+    fresh_sc = fresh.get("scenarios", {})
+    for sc_name in sorted(set(base_sc) & set(fresh_sc)):
+        bd = base_sc[sc_name].get("domains", {})
+        fd = fresh_sc[sc_name].get("domains", {})
+        for d in sorted(set(bd) & set(fd), key=int):
+            t_base, t_fresh = bd[d].get("total"), fd[d].get("total")
+            if not (_finite_pos(t_base) and _finite_pos(t_fresh)):
+                continue        # structure check reports these
+            ratio = t_fresh / t_base
+            if ratio > tolerance:
+                errs.append(
+                    f"scaling:{sc_name}:D={d}: step total regressed "
+                    f"{ratio:.1f}x ({t_base:.0f}us -> {t_fresh:.0f}us, "
+                    f"tolerance {tolerance:g}x)")
+    return errs
+
+
+def compare_mover(baseline: dict, fresh: dict, band: float) -> list[str]:
+    """Regression of the dimensionless fused-vs-two-pass speedup."""
+    s_base = baseline.get("full_cycle", {}).get("speedup")
+    s_fresh = fresh.get("full_cycle", {}).get("speedup")
+    if not _finite_pos(s_base):
+        return [f"mover baseline full_cycle.speedup {s_base!r} unusable"]
+    if not _finite_pos(s_fresh):
+        return [f"mover fresh full_cycle.speedup {s_fresh!r} unusable"]
+    if s_fresh < s_base / band:
+        return [f"mover: full_cycle.speedup regressed "
+                f"{s_base:.2f} -> {s_fresh:.2f} "
+                f"(more than the {band:g}x band)"]
+    return []
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scaling-baseline", default="BENCH_scaling.json")
+    ap.add_argument("--scaling-fresh", default="")
+    ap.add_argument("--tolerance", type=float, default=8.0,
+                    help="max fresh/baseline ratio on scaling step totals")
+    ap.add_argument("--mover-baseline", default="")
+    ap.add_argument("--mover-fresh", default="")
+    ap.add_argument("--mover-band", type=float, default=4.0,
+                    help="max shrink factor of the mover full_cycle speedup")
+    args = ap.parse_args(argv)
+
+    errs: list[str] = []
+    with open(args.scaling_baseline) as fh:
+        baseline = json.load(fh)
+    errs += check_scaling_structure(baseline, "baseline")
+    if args.scaling_fresh:
+        with open(args.scaling_fresh) as fh:
+            fresh = json.load(fh)
+        errs += check_scaling_structure(fresh, "fresh")
+        errs += compare_scaling(baseline, fresh, args.tolerance)
+    if args.mover_baseline and args.mover_fresh:
+        with open(args.mover_baseline) as fh:
+            mover_base = json.load(fh)
+        with open(args.mover_fresh) as fh:
+            mover_fresh = json.load(fh)
+        errs += compare_mover(mover_base, mover_fresh, args.mover_band)
+
+    if errs:
+        for e in errs:
+            print(f"PERF FAIL: {e}", file=sys.stderr)
+        return 1
+    print("perf gate: all checks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,6 +1,6 @@
 #!/usr/bin/env bash
 # CI entry point: tier-1 tests + multi-device lane + smoke perf benchmarks
-# + docs lane.
+# + perf-regression gate + docs lane.
 #
 # Lane 1: the full tier-1 suite on the default single device (multi-device
 #         tests spawn their own emulated-device subprocesses).
@@ -9,12 +9,20 @@
 #         host devices IN-process (XLA_FLAGS) — exercises shard_map
 #         collectives without the subprocess indirection.
 # Lane 3: the smoke benchmarks: mover strategies (BENCH_smoke.json) and the
-#         engine scaling sweep with per-phase times + speedup/PE
-#         (BENCH_scaling.json). Full-size results that gate perf PRs live in
+#         engine scaling sweep with per-phase times + speedup/PE. The
+#         scaling sweep writes to BENCH_scaling.fresh.json — NOT the
+#         committed BENCH_scaling.json, which is the baseline the perf gate
+#         diffs against. Full-size results that gate perf PRs live in
 #         BENCH_mover.json / BENCH_scaling.json (python -m benchmarks.run).
-# Lane 4: docs — no broken relative links in README.md / docs/, and the
+# Lane 4: perf gate — scripts/check_perf.py validates the committed
+#         BENCH_scaling.json structure (every phase <= total, probes carry
+#         noise bounds) and fails on order-of-magnitude regressions of the
+#         fresh smoke totals vs the committed trajectory.
+# Lane 5: docs — no broken relative links in README.md / docs/, and the
 #         README quickstart commands actually run (keep these in sync with
-#         the "Quickstart" section of README.md).
+#         the "Quickstart" section of README.md), including an
+#         observability smoke: --profile-dir trace capture + a metrics
+#         JSONL stream validated against the schema.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -24,7 +32,12 @@ python -m pytest -x -q
 XLA_FLAGS="--xla_force_host_platform_device_count=4" \
     python -m pytest -x -q tests/test_async_engine.py tests/test_slot_ring.py \
     tests/test_mc_sources_engine.py tests/test_collisions_engine.py
-python -m benchmarks.run --smoke --json BENCH_smoke.json
+python -m benchmarks.run --smoke --json BENCH_smoke.json \
+    --scaling-json BENCH_scaling.fresh.json
+
+# ---- perf gate ----
+python scripts/check_perf.py --scaling-baseline BENCH_scaling.json \
+    --scaling-fresh BENCH_scaling.fresh.json
 
 # ---- docs lane ----
 python scripts/check_links.py README.md docs
@@ -36,3 +49,20 @@ python -m repro.launch.pic_run --steps 2 --nc 256 --particles 4096 \
 python -m repro.launch.pic_run --steps 2 --nc 256 --particles 4096 \
     --domains 2 --async-n 2 --rebalance-every 2 --cell-order \
     --collisions elastic,cx,coulomb
+
+# ---- observability smoke ----
+rm -rf ci_profile_smoke
+python -m repro.launch.pic_run --steps 2 --nc 256 --particles 4096 \
+    --domains 2 --async-n 2 --profile-dir ci_profile_smoke \
+    --metrics-jsonl ci_metrics_smoke.jsonl
+test -n "$(find ci_profile_smoke -type f 2>/dev/null)" \
+    || { echo "profile smoke wrote no trace files" >&2; exit 1; }
+python - <<'EOF'
+from repro.obs.metrics import read_jsonl, validate_record, validate_stream
+header, steps = read_jsonl("ci_metrics_smoke.jsonl")
+assert header is not None and steps, (header, len(steps))
+errs = validate_stream([header] + steps)
+assert not errs, errs
+print(f"metrics smoke: header + {len(steps)} valid step records")
+EOF
+rm -rf ci_profile_smoke ci_metrics_smoke.jsonl BENCH_scaling.fresh.json

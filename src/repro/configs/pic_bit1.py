@@ -143,7 +143,7 @@ def make_engine_config(pic_cfg: pic.PICConfig | None = None, *,
                        async_n: int = 1, max_migration: int = 8192,
                        rebalance_every: int = 0, rebalance_skew: int = 0,
                        max_births: int = 8192, use_ring: bool = True,
-                       cell_order: bool = False,
+                       cell_order: bool = False, metrics: bool = False,
                        axis_names: tuple[str, ...] = ("data",),
                        **bench_kw):
     """EngineConfig for the asynchronous multi-device engine, centralizing
@@ -157,8 +157,10 @@ def make_engine_config(pic_cfg: pic.PICConfig | None = None, *,
     ``cell_order=True`` makes the rebalance a BIT1-style counting sort by
     cell (per-cell ordering for the collide phase and deposit locality).
     ``use_ring=False`` selects the legacy full-capacity-scan merge (parity/
-    debug only). With no ``pic_cfg`` the CPU-scale bench config is built
-    from ``bench_kw`` (see ``make_bench_config``).
+    debug only). ``metrics=True`` adds the observability counters to the
+    step diagnostics (``repro.obs``; diagnostics-only, state unchanged).
+    With no ``pic_cfg`` the CPU-scale bench config is built from
+    ``bench_kw`` (see ``make_bench_config``).
     """
     from repro.distributed import engine  # deferred: keep configs light
 
@@ -168,4 +170,4 @@ def make_engine_config(pic_cfg: pic.PICConfig | None = None, *,
         pic=pic_cfg, axis_names=axis_names, async_n=async_n,
         max_migration=max_migration, max_births=max_births,
         rebalance_every=rebalance_every, rebalance_skew=rebalance_skew,
-        use_ring=use_ring, cell_order=cell_order)
+        use_ring=use_ring, cell_order=cell_order, metrics=metrics)

@@ -42,8 +42,13 @@ scheduling             ``rebalance_skew`` (occupancy-skew trigger): compact
 MPI_Allgather (field)  eliminated: ``halo.py`` exchanges edge nodes with
                        ``ppermute`` and distributes the exact double-prefix
                        Poisson solve with scalar-only gathers
-Nsight phase ranges    ``perf.phase_breakdown`` cumulative-checkpoint probes;
+Nsight phase ranges    ``repro.obs.tracing`` named scopes on every phase /
+                       queue stage / halo collective (Perfetto-visible), plus
+                       ``perf.phase_breakdown`` cumulative-checkpoint probes;
                        speedup + PE tables in ``BENCH_scaling.json``
+Online knob tuning     ``repro.obs.autotune`` consumes the per-step metrics
+                       stream (``EngineConfig.metrics``) and retunes the
+                       queue knobs via ``engine.retarget_state``
 =====================  =====================================================
 
 ``core/decomposition.py`` remains as a thin back-compat shim over this
@@ -53,12 +58,13 @@ API, async_n=1).
 
 from repro.distributed.engine import (EngineConfig, EngineState, PHASES,
                                       attach_engine_state, init_engine_state,
-                                      make_engine_step)
+                                      make_engine_step, retarget_state)
 from repro.distributed.perf import (phase_breakdown, queue_stats,
                                     scaling_metrics, write_scaling_json)
 
 __all__ = [
     "EngineConfig", "EngineState", "PHASES", "attach_engine_state",
     "init_engine_state", "make_engine_step", "phase_breakdown",
-    "queue_stats", "scaling_metrics", "write_scaling_json",
+    "queue_stats", "retarget_state", "scaling_metrics",
+    "write_scaling_json",
 ]

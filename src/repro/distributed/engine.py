@@ -120,6 +120,7 @@ from repro.core.particles import (FreeSlotRing, SpeciesBuffer, StackedSpecies,
 from repro.core.pic import PICConfig, PICState
 from repro.core.pic import _carries_rho as pic_carries_rho
 from repro.distributed import halo
+from repro.obs import tracing
 
 Array = jax.Array
 
@@ -149,6 +150,12 @@ class EngineConfig:
     full-capacity-scan merge — a debug/parity mode only (the conservation
     suite pins it against the ring path on identical seeds).
 
+    ``metrics=True`` adds the observability counters to the step
+    diagnostics — per-species free-slot-ring occupancy (``ring_free``) and
+    in-flight pending rows (``pending_rows``) for the ``repro.obs`` metrics
+    stream. Diagnostics-only: the engine state is bitwise identical with
+    the toggle on or off (pinned in ``tests/test_obs.py``).
+
     ``cell_order=True`` is BIT1-style per-cell ordering: every rebalance
     (periodic or skew-triggered) counting-sorts each capacity group by cell
     instead of merely compacting it — live rows grouped by cell, dead rows
@@ -170,6 +177,7 @@ class EngineConfig:
     max_births: int = 2048               # ionization births per domain/step
     use_ring: bool = True                # False: legacy full-scan merge
     cell_order: bool = False             # rebalance counting-sorts by cell
+    metrics: bool = False                # extra diag for the metrics stream
 
     def __post_init__(self):
         object.__setattr__(self, "axis_names", tuple(self.axis_names))
@@ -675,39 +683,42 @@ def make_engine_step(ecfg: EngineConfig, mesh: Mesh, *, upto: str = "full",
         rebalance_periodic = None
         if reb_k > 0:
             rebalance_periodic = (state.step > 0) & (state.step % reb_k == 0)
-        for g, idxs in enumerate(groups):
-            cap_g = group_caps[g]
-            if not (use_ring or reb_k > 0 or skew_k > 0):
-                continue
-            st = stack_species([species[i] for i in idxs])
-            if use_ring:
-                st = _flush_pending(st, pend_in[g])
-            reb_g = rebalance_periodic
-            if skew_k > 0:
-                occ = jax.vmap(lambda a: _queue_occupancy(a, n_q))(st.alive)
-                skew = jnp.max(jnp.max(occ, axis=1) - jnp.min(occ, axis=1))
-                trig = (state.step > 0) & (skew > skew_k)
-                reb_g = trig if reb_g is None else (reb_g | trig)
-            if reb_g is not None:
-                # cell_order swaps the plain compaction for the BIT1-style
-                # counting sort by cell (dead rows still at the tail, so the
-                # ring rebuild is the same closed form)
-                sort_group = (
-                    (lambda s: _cellsort_group(s, cfg.dx, ncl))
-                    if ecfg.cell_order else _compact_group)
+        with tracing.phase_scope("engine/ingest"):
+            for g, idxs in enumerate(groups):
+                cap_g = group_caps[g]
+                if not (use_ring or reb_k > 0 or skew_k > 0):
+                    continue
+                st = stack_species([species[i] for i in idxs])
                 if use_ring:
-                    def reb(op):
-                        new, counts = sort_group(op[0])
-                        return new, jax.vmap(
-                            lambda c: ring_from_counts(c, cap_g))(counts)
+                    st = _flush_pending(st, pend_in[g])
+                reb_g = rebalance_periodic
+                if skew_k > 0:
+                    occ = jax.vmap(
+                        lambda a: _queue_occupancy(a, n_q))(st.alive)
+                    skew = jnp.max(jnp.max(occ, axis=1)
+                                   - jnp.min(occ, axis=1))
+                    trig = (state.step > 0) & (skew > skew_k)
+                    reb_g = trig if reb_g is None else (reb_g | trig)
+                if reb_g is not None:
+                    # cell_order swaps the plain compaction for the
+                    # BIT1-style counting sort by cell (dead rows still at
+                    # the tail, so the ring rebuild is the same closed form)
+                    sort_group = (
+                        (lambda s: _cellsort_group(s, cfg.dx, ncl))
+                        if ecfg.cell_order else _compact_group)
+                    if use_ring:
+                        def reb(op):
+                            new, counts = sort_group(op[0])
+                            return new, jax.vmap(
+                                lambda c: ring_from_counts(c, cap_g))(counts)
 
-                    st, rings[g] = jax.lax.cond(
-                        reb_g, reb, lambda op: op, (st, rings[g]))
-                else:
-                    st = jax.lax.cond(
-                        reb_g, lambda s: sort_group(s)[0],
-                        lambda s: s, st)
-            write_back(idxs, st)
+                        st, rings[g] = jax.lax.cond(
+                            reb_g, reb, lambda op: op, (st, rings[g]))
+                    else:
+                        st = jax.lax.cond(
+                            reb_g, lambda s: sort_group(s)[0],
+                            lambda s: s, st)
+                write_back(idxs, st)
         empty_pend = [
             _empty_pending(len(idxs), prows[g], group_caps[g],
                            species[idxs[0]].x.dtype)
@@ -718,22 +729,24 @@ def make_engine_step(ecfg: EngineConfig, mesh: Mesh, *, upto: str = "full",
             return pack_state(state.rho, empty_pend), aux
 
         # ---- field phase: halo exchange, never a full-rho all_gather ----
-        if not cfg.field_solve:
-            e = jnp.zeros((ncl + 1,), jnp.float32)
-        else:
-            if carried and state.rho is not None:
-                rho_local = state.rho[0]
+        with tracing.phase_scope("engine/field"):
+            if not cfg.field_solve:
+                e = jnp.zeros((ncl + 1,), jnp.float32)
             else:
-                rho_local = jnp.zeros((ncl + 1,), jnp.float32)
-                for idxs in groups:
-                    _, _, _, charges = group_meta(idxs)
-                    st = stack_species([species[i] for i in idxs])
-                    rho_local = rho_local + deposit_stacked(
-                        grid_local, st.x, st.w, st.alive, charges)
-            e = halo.field_phase(
-                rho_local, dx=cfg.dx, eps0=cfg.eps0,
-                smoothing_passes=cfg.smoothing_passes, axis_names=axis_names,
-                mesh=mesh, is_first=is_first, is_last=is_last)
+                if carried and state.rho is not None:
+                    rho_local = state.rho[0]
+                else:
+                    rho_local = jnp.zeros((ncl + 1,), jnp.float32)
+                    for idxs in groups:
+                        _, _, _, charges = group_meta(idxs)
+                        st = stack_species([species[i] for i in idxs])
+                        rho_local = rho_local + deposit_stacked(
+                            grid_local, st.x, st.w, st.alive, charges)
+                e = halo.field_phase(
+                    rho_local, dx=cfg.dx, eps0=cfg.eps0,
+                    smoothing_passes=cfg.smoothing_passes,
+                    axis_names=axis_names, mesh=mesh, is_first=is_first,
+                    is_last=is_last)
         if upto == "field":
             return pack_state(state.rho, empty_pend), e[None]
 
@@ -752,25 +765,27 @@ def make_engine_step(ecfg: EngineConfig, mesh: Mesh, *, upto: str = "full",
         ne_local = None
         iparams = eparams = None
         ion_keys = see_keys = None
-        if ion is not None:
-            iparams = collisions.IonizationParams(
-                rate=cfg.ionization_rate, vth_electron=cfg.ionization_vth_e)
-            ne_local = halo.halo_sum(
-                deposit_density(grid_local, species[ion[1]]),
-                axis_names, mesh, is_first, is_last)
-        if see_pairs:
-            eparams = boundaries.EmissionParams(
-                yield_=cfg.emission_yield, vth_emit=cfg.emission_vth,
-                weight=cfg.emission_weight)
-        if has_mc:
-            key, k_mc = jax.random.split(key)
-            k_mc = jax.random.fold_in(k_mc, r)
-            k_ion, k_see = jax.random.split(k_mc)
-            ion_keys = jax.random.split(k_ion, n_q)
+        with tracing.phase_scope("engine/sources"):
+            if ion is not None:
+                iparams = collisions.IonizationParams(
+                    rate=cfg.ionization_rate,
+                    vth_electron=cfg.ionization_vth_e)
+                ne_local = halo.halo_sum(
+                    deposit_density(grid_local, species[ion[1]]),
+                    axis_names, mesh, is_first, is_last)
             if see_pairs:
-                see_keys = jax.random.split(
-                    k_see, len(see_pairs) * n_q).reshape(
-                    (len(see_pairs), n_q, -1))
+                eparams = boundaries.EmissionParams(
+                    yield_=cfg.emission_yield, vth_emit=cfg.emission_vth,
+                    weight=cfg.emission_weight)
+            if has_mc:
+                key, k_mc = jax.random.split(key)
+                k_mc = jax.random.fold_in(k_mc, r)
+                k_ion, k_see = jax.random.split(k_mc)
+                ion_keys = jax.random.split(k_ion, n_q)
+                if see_pairs:
+                    see_keys = jax.random.split(
+                        k_see, len(see_pairs) * n_q).reshape(
+                        (len(see_pairs), n_q, -1))
 
         # ---- collide inputs: per-cell rate densities from the full local
         #      buffers (cells are wholly domain-owned — no halo needed) and
@@ -779,12 +794,13 @@ def make_engine_step(ecfg: EngineConfig, mesh: Mesh, *, upto: str = "full",
         coll_dens = None
         coll_keys = None
         if coll:
-            coll_dens = {
-                i: collisions.cell_density(grid_local, species[i])
-                for i in collisions.density_species(coll)}
-            key, k_coll = jax.random.split(key)
-            k_coll = jax.random.fold_in(k_coll, r)
-            coll_keys = jax.random.split(k_coll, n_q)
+            with tracing.phase_scope("engine/collide_setup"):
+                coll_dens = {
+                    i: collisions.cell_density(grid_local, species[i])
+                    for i in collisions.density_species(coll)}
+                key, k_coll = jax.random.split(key)
+                k_coll = jax.random.fold_in(k_coll, r)
+                coll_keys = jax.random.split(k_coll, n_q)
 
         # ---- async(n) pipeline: push queue k, run its MC sources, issue
         #      its migration collective, then push queue k+1 while k's
@@ -798,22 +814,25 @@ def make_engine_step(ecfg: EngineConfig, mesh: Mesh, *, upto: str = "full",
             st = stack_species([species[i] for i in idxs])
             kept_qs, pending_packs = [], []
             for k_q, q in enumerate(_split_queues(st, n_q)):
-                out, hl, hr, pdiag, rho_push = mover.push_stacked(
-                    q, e, grid_local, qm, dts, b=cfg.b_field,
-                    boundary="open", gather_mode=cfg.gather_mode,
-                    charges=charges if carried else None,
-                    rho_carry=rho_acc if carried else None)
-                if any(s > 1 for s in strides):
-                    # sub-cycling: heavy species push every `stride` steps
-                    do = jnp.mod(state.step, jnp.asarray(strides)) == 0
-                    sel = lambda new, old: jnp.where(
-                        do.reshape((-1,) + (1,) * (new.ndim - 1)), new, old)
-                    out = jax.tree.map(sel, out, q)
-                    pdiag = {k: jnp.where(do, v, jnp.zeros_like(v))
-                             for k, v in pdiag.items()}
-                for j, sc in enumerate(scs):
-                    for k, v in pdiag.items():
-                        dacc(sc.name, k, v[j])
+                with tracing.phase_scope(f"engine/push/q{k_q}"):
+                    out, hl, hr, pdiag, rho_push = mover.push_stacked(
+                        q, e, grid_local, qm, dts, b=cfg.b_field,
+                        boundary="open", gather_mode=cfg.gather_mode,
+                        charges=charges if carried else None,
+                        rho_carry=rho_acc if carried else None)
+                    if any(s > 1 for s in strides):
+                        # sub-cycling: heavy species push every `stride`
+                        # steps
+                        do = jnp.mod(state.step, jnp.asarray(strides)) == 0
+                        sel = lambda new, old: jnp.where(
+                            do.reshape((-1,) + (1,) * (new.ndim - 1)),
+                            new, old)
+                        out = jax.tree.map(sel, out, q)
+                        pdiag = {k: jnp.where(do, v, jnp.zeros_like(v))
+                                 for k, v in pdiag.items()}
+                    for j, sc in enumerate(scs):
+                        for k, v in pdiag.items():
+                            dacc(sc.name, k, v[j])
                 if upto == "push":
                     if carried:
                         rho_acc = rho_push      # keep the in-pass deposit
@@ -828,21 +847,24 @@ def make_engine_step(ecfg: EngineConfig, mesh: Mesh, *, upto: str = "full",
                 #      traffic and no carried-rho correction ----
                 g_coll = [cc for cc in coll if loc[cc.species][0] == g]
                 if g_coll:
-                    rows_c = collisions.involved_species(g_coll)
-                    cbufs = {i: SpeciesBuffer(
-                        x=out.x[idxs.index(i)], v=out.v[idxs.index(i)],
-                        w=out.w[idxs.index(i)], alive=out.alive[idxs.index(i)])
-                        for i in rows_c}
-                    cbufs, cdiag = collisions.apply_menu(
-                        jax.random.fold_in(coll_keys[k_q], g), cbufs, g_coll,
-                        coll_dens, grid_local, cfg.dt, cfg.collide_kernel)
-                    for i, cb in cbufs.items():
-                        j = idxs.index(i)
-                        out = StackedSpecies(
-                            x=out.x, v=out.v.at[j].set(cb.v), w=out.w,
-                            alive=out.alive)
-                    for ck, cv in cdiag.items():
-                        dacc(None, ck, cv)
+                    with tracing.phase_scope(f"engine/collide/q{k_q}"):
+                        rows_c = collisions.involved_species(g_coll)
+                        cbufs = {i: SpeciesBuffer(
+                            x=out.x[idxs.index(i)], v=out.v[idxs.index(i)],
+                            w=out.w[idxs.index(i)],
+                            alive=out.alive[idxs.index(i)])
+                            for i in rows_c}
+                        cbufs, cdiag = collisions.apply_menu(
+                            jax.random.fold_in(coll_keys[k_q], g), cbufs,
+                            g_coll, coll_dens, grid_local, cfg.dt,
+                            cfg.collide_kernel)
+                        for i, cb in cbufs.items():
+                            j = idxs.index(i)
+                            out = StackedSpecies(
+                                x=out.x, v=out.v.at[j].set(cb.v), w=out.w,
+                                alive=out.alive)
+                        for ck, cv in cdiag.items():
+                            dacc(None, ck, cv)
                 if upto == "collide":
                     if carried:
                         rho_acc = rho_push
@@ -852,116 +874,126 @@ def make_engine_step(ecfg: EngineConfig, mesh: Mesh, *, upto: str = "full",
                 # ---- MC ionization on this queue (before the exchange, so
                 #      ionized neutrals are never packed as crossers) ----
                 if ion is not None and ion[0] in idxs:
-                    ni, ei, ii = ion
-                    jn = idxs.index(ni)
-                    qn = SpeciesBuffer(x=out.x[jn], v=out.v[jn],
-                                       w=out.w[jn], alive=out.alive[jn])
-                    pack = collisions.ionize_packed(
-                        ion_keys[k_q], qn, grid_local, iparams, cfg.dt,
-                        ne_local, b_q)
-                    (ge, je), (gi, ji) = loc[ei], loc[ii]
-                    if use_ring:
-                        # pre-claim one electron + one ion slot per birth
-                        # under the shared min-count budget: a birth gets
-                        # both slots or neither (no half pairs, no leaks)
-                        if ge == gi:
-                            avail = jnp.minimum(rings[ge].count[je],
-                                                rings[ge].count[ji])
-                            rings[ge], dest, okm = _claim_rows(
-                                rings[ge], {je: pack.ok, ji: pack.ok},
-                                group_caps[ge], avail)
-                            allowed = okm[je]
-                            dest_e, dest_i = dest[je], dest[ji]
+                    with tracing.phase_scope(f"engine/ionize/q{k_q}"):
+                        ni, ei, ii = ion
+                        jn = idxs.index(ni)
+                        qn = SpeciesBuffer(x=out.x[jn], v=out.v[jn],
+                                           w=out.w[jn], alive=out.alive[jn])
+                        pack = collisions.ionize_packed(
+                            ion_keys[k_q], qn, grid_local, iparams, cfg.dt,
+                            ne_local, b_q)
+                        (ge, je), (gi, ji) = loc[ei], loc[ii]
+                        if use_ring:
+                            # pre-claim one electron + one ion slot per
+                            # birth under the shared min-count budget: a
+                            # birth gets both slots or neither (no half
+                            # pairs, no leaks)
+                            if ge == gi:
+                                avail = jnp.minimum(rings[ge].count[je],
+                                                    rings[ge].count[ji])
+                                rings[ge], dest, okm = _claim_rows(
+                                    rings[ge], {je: pack.ok, ji: pack.ok},
+                                    group_caps[ge], avail)
+                                allowed = okm[je]
+                                dest_e, dest_i = dest[je], dest[ji]
+                            else:
+                                avail = jnp.minimum(rings[ge].count[je],
+                                                    rings[gi].count[ji])
+                                rings[ge], de, oe = _claim_rows(
+                                    rings[ge], {je: pack.ok},
+                                    group_caps[ge], avail)
+                                rings[gi], di, _ = _claim_rows(
+                                    rings[gi], {ji: pack.ok},
+                                    group_caps[gi], avail)
+                                allowed = oe[je]
+                                dest_e, dest_i = de[je], di[ji]
+                            # freed neutral slots feed the ring like
+                            # leavers (queue slot j -> global slot
+                            # j * n_q + k_q)
+                            rings[g] = _push_rows(
+                                rings[g],
+                                {jn: (pack.slot * n_q + k_q, allowed)}, b_q)
                         else:
-                            avail = jnp.minimum(rings[ge].count[je],
-                                                rings[gi].count[ji])
-                            rings[ge], de, oe = _claim_rows(
-                                rings[ge], {je: pack.ok}, group_caps[ge],
-                                avail)
-                            rings[gi], di, _ = _claim_rows(
-                                rings[gi], {ji: pack.ok}, group_caps[gi],
-                                avail)
-                            allowed = oe[je]
-                            dest_e, dest_i = de[je], di[ji]
-                        # freed neutral slots feed the ring like leavers
-                        # (queue slot j -> global slot j * n_q + k_q)
-                        rings[g] = _push_rows(
-                            rings[g],
-                            {jn: (pack.slot * n_q + k_q, allowed)}, b_q)
-                    else:
-                        allowed = pack.ok
-                        dest_e = dest_i = None
-                    killed = kill_packed(qn, pack.slot, allowed)
-                    out = StackedSpecies(
-                        x=out.x.at[jn].set(killed.x),
-                        v=out.v.at[jn].set(killed.v),
-                        w=out.w.at[jn].set(killed.w),
-                        alive=out.alive.at[jn].set(killed.alive))
-                    e_row = (pack.x, pack.v_electron, pack.w, allowed,
-                             dest_e)
-                    i_row = (pack.x, pack.v_ion, pack.w, allowed, dest_i)
-                    if ge == gi:
-                        birth_blocks[ge].append(_birth_block(
-                            len(groups[ge]), b_q, group_caps[ge], dtype,
-                            {je: e_row, ji: i_row}))
-                    else:
-                        birth_blocks[ge].append(_birth_block(
-                            len(groups[ge]), b_q, group_caps[ge], dtype,
-                            {je: e_row}))
-                        birth_blocks[gi].append(_birth_block(
-                            len(groups[gi]), b_q, group_caps[gi], dtype,
-                            {ji: i_row}))
-                    n_born = jnp.sum(allowed.astype(jnp.int32))
-                    dacc(None, "n_ionized", n_born)
-                    dacc(None, "birth_overflow", pack.n_events - n_born)
+                            allowed = pack.ok
+                            dest_e = dest_i = None
+                        killed = kill_packed(qn, pack.slot, allowed)
+                        out = StackedSpecies(
+                            x=out.x.at[jn].set(killed.x),
+                            v=out.v.at[jn].set(killed.v),
+                            w=out.w.at[jn].set(killed.w),
+                            alive=out.alive.at[jn].set(killed.alive))
+                        e_row = (pack.x, pack.v_electron, pack.w, allowed,
+                                 dest_e)
+                        i_row = (pack.x, pack.v_ion, pack.w, allowed,
+                                 dest_i)
+                        if ge == gi:
+                            birth_blocks[ge].append(_birth_block(
+                                len(groups[ge]), b_q, group_caps[ge],
+                                dtype, {je: e_row, ji: i_row}))
+                        else:
+                            birth_blocks[ge].append(_birth_block(
+                                len(groups[ge]), b_q, group_caps[ge],
+                                dtype, {je: e_row}))
+                            birth_blocks[gi].append(_birth_block(
+                                len(groups[gi]), b_q, group_caps[gi],
+                                dtype, {ji: i_row}))
+                        n_born = jnp.sum(allowed.astype(jnp.int32))
+                        dacc(None, "n_ionized", n_born)
+                        dacc(None, "birth_overflow", pack.n_events - n_born)
 
-                (kept, pack_l, pack_r, lv_x, lv_w, free_idx, free_ok,
-                 abs_l, abs_r, dmig) = _exchange_queue(
-                    out, l_local, m_q, cfg.boundary, is_first, is_last)
-                if carried:
-                    # leavers were deposited at their raw (edge-clipped)
-                    # positions by the in-pass deposit; take them back out
-                    rho_acc = rho_push - deposit_windowed(
-                        grid_local, lv_x, charges[:, None] * lv_w)
-                if use_ring:
-                    # leaver slots are free from here on: feed the ring from
-                    # the already-packed indices (queue slot j -> global
-                    # slot j * n_q + k_q), no extra scan
-                    rings[g] = jax.vmap(ring_push)(
-                        rings[g], free_idx * n_q + k_q, free_ok)
-
-                # ---- SEE: yield-thinned secondaries off this queue's
-                #      absorbed rows (already packed by the exchange) ----
-                for pi, (p, t) in enumerate(see_pairs):
-                    if p not in idxs:
-                        continue
-                    jp = idxs.index(p)
-                    emit, ex, ev, ew = boundaries.emission_candidates(
-                        see_keys[pi, k_q], abs_l[jp], abs_r[jp], eparams,
-                        l_local, dtype)
-                    gt, jt = loc[t]
+                with tracing.phase_scope(f"engine/migrate/q{k_q}"):
+                    (kept, pack_l, pack_r, lv_x, lv_w, free_idx, free_ok,
+                     abs_l, abs_r, dmig) = _exchange_queue(
+                        out, l_local, m_q, cfg.boundary, is_first, is_last)
+                    if carried:
+                        # leavers were deposited at their raw (edge-clipped)
+                        # positions by the in-pass deposit; take them back
+                        # out
+                        rho_acc = rho_push - deposit_windowed(
+                            grid_local, lv_x, charges[:, None] * lv_w)
                     if use_ring:
-                        rings[gt], dstm, okm = _claim_rows(
-                            rings[gt], {jt: emit}, group_caps[gt])
-                        ok_t, dest_t = okm[jt], dstm[jt]
-                    else:
-                        ok_t, dest_t = emit, None
-                    birth_blocks[gt].append(_birth_block(
-                        len(groups[gt]), 2 * m_q, group_caps[gt], dtype,
-                        {jt: (ex, ev, ew, ok_t, dest_t)}))
-                    n_emit = jnp.sum(ok_t.astype(jnp.int32))
-                    dacc(cfg.species[t].name, "emitted", n_emit)
-                    dacc(cfg.species[t].name, "emission_overflow",
-                         jnp.sum((emit & ~ok_t).astype(jnp.int32)))
+                        # leaver slots are free from here on: feed the ring
+                        # from the already-packed indices (queue slot j ->
+                        # global slot j * n_q + k_q), no extra scan
+                        rings[g] = jax.vmap(ring_push)(
+                            rings[g], free_idx * n_q + k_q, free_ok)
 
-                recv_r = halo.ppermute_tree(pack_l, axis_names, -1, mesh)
-                recv_l = halo.ppermute_tree(pack_r, axis_names, +1, mesh)
-                kept_qs.append(StackedSpecies(
-                    x=kept.x, v=kept.v, w=kept.w, alive=kept.alive))
-                pending_packs.append((recv_l, recv_r))
-                for j, sc in enumerate(scs):
-                    for k, v in dmig.items():
-                        dacc(sc.name, k, v[j])
+                    # ---- SEE: yield-thinned secondaries off this queue's
+                    #      absorbed rows (already packed by the exchange) --
+                    for pi, (p, t) in enumerate(see_pairs):
+                        if p not in idxs:
+                            continue
+                        with tracing.phase_scope(f"engine/see/q{k_q}"):
+                            jp = idxs.index(p)
+                            emit, ex, ev, ew = \
+                                boundaries.emission_candidates(
+                                    see_keys[pi, k_q], abs_l[jp], abs_r[jp],
+                                    eparams, l_local, dtype)
+                            gt, jt = loc[t]
+                            if use_ring:
+                                rings[gt], dstm, okm = _claim_rows(
+                                    rings[gt], {jt: emit}, group_caps[gt])
+                                ok_t, dest_t = okm[jt], dstm[jt]
+                            else:
+                                ok_t, dest_t = emit, None
+                            birth_blocks[gt].append(_birth_block(
+                                len(groups[gt]), 2 * m_q, group_caps[gt],
+                                dtype, {jt: (ex, ev, ew, ok_t, dest_t)}))
+                            n_emit = jnp.sum(ok_t.astype(jnp.int32))
+                            dacc(cfg.species[t].name, "emitted", n_emit)
+                            dacc(cfg.species[t].name, "emission_overflow",
+                                 jnp.sum((emit & ~ok_t).astype(jnp.int32)))
+
+                    recv_r = halo.ppermute_tree(pack_l, axis_names, -1,
+                                                mesh)
+                    recv_l = halo.ppermute_tree(pack_r, axis_names, +1,
+                                                mesh)
+                    kept_qs.append(StackedSpecies(
+                        x=kept.x, v=kept.v, w=kept.w, alive=kept.alive))
+                    pending_packs.append((recv_l, recv_r))
+                    for j, sc in enumerate(scs):
+                        for k, v in dmig.items():
+                            dacc(sc.name, k, v[j])
             staged.append((idxs, charges, kept_qs, pending_packs))
 
         if upto in ("push", "collide", "migrate"):
@@ -984,44 +1016,48 @@ def make_engine_step(ecfg: EngineConfig, mesh: Mesh, *, upto: str = "full",
         #      (use_ring=False): one full-capacity free-slot scan per
         #      species over arrivals AND births, scattered immediately ----
         pend_out = list(empty_pend)
-        for g, (idxs, charges, kept_qs, pending_packs) in enumerate(staged):
-            scs = [cfg.species[i] for i in idxs]
-            cap_g = group_caps[g]
-            full = _merge_queues(kept_qs, n_q)
-            packs = [p for pair in pending_packs for p in pair]
-            cand = jax.tree.map(
-                lambda *xs: jnp.concatenate(xs, axis=1), *packs)
-            if use_ring:
-                rings[g], dest, accepted = jax.vmap(
-                    lambda rg, wnt: ring_claim(rg, wnt, cap_g))(
-                    rings[g], cand.alive)
-                blocks = [PendingArrivals(
-                    x=cand.x, v=cand.v, w=cand.w * accepted,
-                    alive=cand.alive & accepted, dest=dest)]
-                blocks += birth_blocks[g]
-                pend_g = blocks[0] if len(blocks) == 1 else jax.tree.map(
-                    lambda *xs: jnp.concatenate(xs, axis=1), *blocks)
-                pend_out[g] = pend_g
-                dropped = jnp.sum((cand.alive & ~accepted).astype(jnp.int32),
-                                  axis=1)
-                write_back(idxs, full)
-                if carried:
-                    rho_acc = rho_acc + deposit_windowed(
-                        grid_local, pend_g.x,
-                        charges[:, None] * pend_g.w * pend_g.alive)
-            else:
-                extra = [SpeciesBuffer(x=b.x, v=b.v, w=b.w, alive=b.alive)
-                         for b in birth_blocks[g]]
-                cand_all = cand if not extra else jax.tree.map(
-                    lambda *xs: jnp.concatenate(xs, axis=1), cand, *extra)
-                merged, dropped, accepted = _inject_rows(full, cand_all)
-                write_back(idxs, merged)
-                if carried:
-                    rho_acc = rho_acc + deposit_windowed(
-                        grid_local, cand_all.x,
-                        charges[:, None] * cand_all.w * accepted)
-            for j, sc in enumerate(scs):
-                dacc(sc.name, "merge_dropped", dropped[j])
+        with tracing.phase_scope("engine/merge"):
+            for g, (idxs, charges, kept_qs,
+                    pending_packs) in enumerate(staged):
+                scs = [cfg.species[i] for i in idxs]
+                cap_g = group_caps[g]
+                full = _merge_queues(kept_qs, n_q)
+                packs = [p for pair in pending_packs for p in pair]
+                cand = jax.tree.map(
+                    lambda *xs: jnp.concatenate(xs, axis=1), *packs)
+                if use_ring:
+                    rings[g], dest, accepted = jax.vmap(
+                        lambda rg, wnt: ring_claim(rg, wnt, cap_g))(
+                        rings[g], cand.alive)
+                    blocks = [PendingArrivals(
+                        x=cand.x, v=cand.v, w=cand.w * accepted,
+                        alive=cand.alive & accepted, dest=dest)]
+                    blocks += birth_blocks[g]
+                    pend_g = blocks[0] if len(blocks) == 1 else jax.tree.map(
+                        lambda *xs: jnp.concatenate(xs, axis=1), *blocks)
+                    pend_out[g] = pend_g
+                    dropped = jnp.sum(
+                        (cand.alive & ~accepted).astype(jnp.int32), axis=1)
+                    write_back(idxs, full)
+                    if carried:
+                        rho_acc = rho_acc + deposit_windowed(
+                            grid_local, pend_g.x,
+                            charges[:, None] * pend_g.w * pend_g.alive)
+                else:
+                    extra = [SpeciesBuffer(x=b.x, v=b.v, w=b.w,
+                                           alive=b.alive)
+                             for b in birth_blocks[g]]
+                    cand_all = cand if not extra else jax.tree.map(
+                        lambda *xs: jnp.concatenate(xs, axis=1), cand,
+                        *extra)
+                    merged, dropped, accepted = _inject_rows(full, cand_all)
+                    write_back(idxs, merged)
+                    if carried:
+                        rho_acc = rho_acc + deposit_windowed(
+                            grid_local, cand_all.x,
+                            charges[:, None] * cand_all.w * accepted)
+                for j, sc in enumerate(scs):
+                    dacc(sc.name, "merge_dropped", dropped[j])
         rho_out = rho_acc[None] if carried else state.rho
         if upto == "merge":
             return pack_state(rho_out, pend_out), e[None]
@@ -1033,26 +1069,40 @@ def make_engine_step(ecfg: EngineConfig, mesh: Mesh, *, upto: str = "full",
         # reductions match the post-ingest buffer bitwise — a separate
         # pending sum term would flip the charge total by an ulp and break
         # the engine's exact cross-D conservation contract.
-        eff = list(species)
-        if use_ring:
-            for g, idxs in enumerate(groups):
-                st = _flush_pending(
-                    stack_species([species[i] for i in idxs]), pend_out[g])
-                for j, i in enumerate(idxs):
-                    eff[i] = SpeciesBuffer(
-                        x=st.x[j], v=st.v[j], w=st.w[j], alive=st.alive[j])
-        for sc, buf in zip(cfg.species, eff):
-            diag[f"{sc.name}/count"] = buf.count()
-            diag[f"{sc.name}/ke"] = diagnostics.kinetic_energy(buf, sc.mass)
-            diag[f"{sc.name}/charge"] = diagnostics.total_charge(
-                buf, sc.charge)
-            occ = _queue_occupancy(buf.alive, n_q)
-            diag[f"{sc.name}/queue_occ"] = occ
-            diag[f"{sc.name}/queue_skew"] = jnp.max(occ) - jnp.min(occ)
-        diag = {k: (jax.lax.pmax(v, axis_names)
-                    if k.endswith("/queue_skew")
-                    else jax.lax.psum(v, axis_names))
-                for k, v in diag.items()}
+        with tracing.phase_scope("engine/diag"):
+            eff = list(species)
+            if use_ring:
+                for g, idxs in enumerate(groups):
+                    st = _flush_pending(
+                        stack_species([species[i] for i in idxs]),
+                        pend_out[g])
+                    for j, i in enumerate(idxs):
+                        eff[i] = SpeciesBuffer(
+                            x=st.x[j], v=st.v[j], w=st.w[j],
+                            alive=st.alive[j])
+            for sc, buf in zip(cfg.species, eff):
+                diag[f"{sc.name}/count"] = buf.count()
+                diag[f"{sc.name}/ke"] = diagnostics.kinetic_energy(
+                    buf, sc.mass)
+                diag[f"{sc.name}/charge"] = diagnostics.total_charge(
+                    buf, sc.charge)
+                occ = _queue_occupancy(buf.alive, n_q)
+                diag[f"{sc.name}/queue_occ"] = occ
+                diag[f"{sc.name}/queue_skew"] = jnp.max(occ) - jnp.min(occ)
+            if ecfg.metrics and use_ring:
+                # observability extras (diagnostics-only — the state math
+                # is untouched, so metrics on/off stays bitwise identical):
+                # free-slot-ring occupancy and in-flight pending rows, the
+                # quantities the auto-tuner's budget decisions read
+                for i, sc in enumerate(cfg.species):
+                    g, j = loc[i]
+                    diag[f"{sc.name}/ring_free"] = rings[g].count[j]
+                    diag[f"{sc.name}/pending_rows"] = jnp.sum(
+                        pend_out[g].alive[j].astype(jnp.int32))
+            diag = {k: (jax.lax.pmax(v, axis_names)
+                        if k.endswith("/queue_skew")
+                        else jax.lax.psum(v, axis_names))
+                    for k, v in diag.items()}
 
         return pack_state(rho_out, pend_out), diag
 
@@ -1101,6 +1151,62 @@ def attach_engine_state(ecfg: EngineConfig, mesh: Mesh,
     specs = _state_specs(ecfg, mesh)
     f = halo.shard_map(local, mesh=mesh, in_specs=(specs.pic,),
                        out_specs=specs, check_vma=False)
+    return jax.jit(f)(state)
+
+
+def retarget_state(old: EngineConfig, new: EngineConfig, mesh: Mesh,
+                   state: EngineState) -> EngineState:
+    """Carry a live EngineState across an engine-knob change (auto-tuner).
+
+    The queue-schedule knobs are compile-time constants, so retuning means
+    rebuilding the step function — but the state must survive. Knobs that
+    leave the state pytree alone (``async_n``, ``rebalance_every``,
+    ``rebalance_skew``, ``cell_order``, ``metrics``) return the state
+    unchanged. The budget knobs (``max_migration``, ``max_births``) size
+    ``EngineState.pending``, so those retunes flush the in-flight arrivals
+    into their pre-claimed slots (exactly the scatter the next ingest would
+    have done), rebuild the free-slot rings from the alive masks (the one
+    full scan the ring design allows outside init), and attach empty
+    pending blocks sized for the new config. Conservation is exact: the
+    flush lands every pending row, and the carried rho already includes
+    their deposits (merge-time correction), so ``pic.rho`` carries over
+    untouched. The physics config must be identical — retargeting never
+    reinterprets particles.
+    """
+    if old.pic != new.pic:
+        raise ValueError(
+            "retarget_state only retunes engine knobs; the physics config "
+            "(EngineConfig.pic) must be identical")
+    groups_old = _capacity_groups(old, mesh)
+    groups_new = _capacity_groups(new, mesh)
+    if (old.use_ring == new.use_ring and groups_old == groups_new
+            and _group_pending_rows(old, groups_old)
+            == _group_pending_rows(new, groups_new)):
+        return state  # same pytree shape: the next compile picks it up
+
+    def local(est: EngineState) -> EngineState:
+        bufs = [jax.tree.map(lambda a: a[0], b) for b in est.pic.species]
+        if old.use_ring:
+            pend_in = [jax.tree.map(lambda a: a[0], p) for p in est.pending]
+            for g, idxs in enumerate(groups_old):
+                st = _flush_pending(
+                    stack_species([bufs[i] for i in idxs]), pend_in[g])
+                for j, i in enumerate(idxs):
+                    bufs[i] = SpeciesBuffer(x=st.x[j], v=st.v[j], w=st.w[j],
+                                            alive=st.alive[j])
+        pic_out = PICState(species=tuple(_lift_tree(b) for b in bufs),
+                           key=est.pic.key, step=est.pic.step,
+                           rho=est.pic.rho)
+        if not new.use_ring:
+            return EngineState(pic=pic_out, rings=(), pending=())
+        rings, pending = _engine_extras(new, mesh, bufs)
+        return EngineState(
+            pic=pic_out, rings=tuple(_lift_tree(rg) for rg in rings),
+            pending=tuple(_lift_tree(p) for p in pending))
+
+    f = halo.shard_map(local, mesh=mesh,
+                       in_specs=(_state_specs(old, mesh),),
+                       out_specs=_state_specs(new, mesh), check_vma=False)
     return jax.jit(f)(state)
 
 

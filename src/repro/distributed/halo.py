@@ -35,6 +35,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh
 
+from repro.obs import tracing
+
 try:                                   # jax >= 0.6: public top-level API
     from jax import shard_map as _shard_map_impl
 except ImportError:                    # jax 0.4.x: experimental namespace
@@ -80,8 +82,9 @@ def ring_perm(axis_names, shift: int, mesh: Mesh):
 
 def ppermute_tree(tree, axis_names, shift: int, mesh: Mesh):
     perm = ring_perm(axis_names, shift, mesh)
-    return jax.tree.map(
-        lambda a: jax.lax.ppermute(a, axis_names, perm), tree)
+    with tracing.phase_scope("halo/ppermute"):
+        return jax.tree.map(
+            lambda a: jax.lax.ppermute(a, axis_names, perm), tree)
 
 
 def neighbor_vals(send_left: Array, send_right: Array, axis_names, mesh: Mesh,
@@ -119,9 +122,10 @@ def halo_sum(rho: Array, axis_names, mesh: Mesh, is_first: Array,
     after a local deposit each copy holds only the particles of its own slab.
     Exchange the two partials so both copies carry the full sum.
     """
-    from_left, from_right = neighbor_vals(rho[0], rho[-1], axis_names, mesh,
-                                          is_first, is_last)
-    return rho.at[0].add(from_left).at[-1].add(from_right)
+    with tracing.phase_scope("halo/sum"):
+        from_left, from_right = neighbor_vals(rho[0], rho[-1], axis_names,
+                                              mesh, is_first, is_last)
+        return rho.at[0].add(from_left).at[-1].add(from_right)
 
 
 def smooth_halo(f: Array, passes: int, axis_names, mesh: Mesh,
@@ -132,18 +136,19 @@ def smooth_halo(f: Array, passes: int, axis_names, mesh: Mesh,
     nodes use the centered stencil with one exchanged halo node per side;
     the global walls use the integral-conserving (3/4, 1/4) one-sided stencil.
     """
-    for _ in range(passes):
-        # my left halo is the left neighbor's f[-2] (f[0]/f[-1] are the shared
-        # copies); my right halo is the right neighbor's f[1]
-        hl, hr = neighbor_vals(f[1], f[-2], axis_names, mesh,
-                               is_first, is_last)
-        ext = jnp.concatenate([hl[None], f, hr[None]])
-        out = 0.25 * ext[:-2] + 0.5 * ext[1:-1] + 0.25 * ext[2:]
-        out = out.at[0].set(
-            jnp.where(is_first, 0.75 * f[0] + 0.25 * f[1], out[0]))
-        out = out.at[-1].set(
-            jnp.where(is_last, 0.25 * f[-2] + 0.75 * f[-1], out[-1]))
-        f = out
+    with tracing.phase_scope("halo/smooth"):
+        for _ in range(passes):
+            # my left halo is the left neighbor's f[-2] (f[0]/f[-1] are the
+            # shared copies); my right halo is the right neighbor's f[1]
+            hl, hr = neighbor_vals(f[1], f[-2], axis_names, mesh,
+                                   is_first, is_last)
+            ext = jnp.concatenate([hl[None], f, hr[None]])
+            out = 0.25 * ext[:-2] + 0.5 * ext[1:-1] + 0.25 * ext[2:]
+            out = out.at[0].set(
+                jnp.where(is_first, 0.75 * f[0] + 0.25 * f[1], out[0]))
+            out = out.at[-1].set(
+                jnp.where(is_last, 0.25 * f[-2] + 0.75 * f[-1], out[-1]))
+            f = out
     return f
 
 
@@ -158,53 +163,57 @@ def solve_poisson_halo(rho: Array, dx: float, eps0: float, axis_names,
     per pass, assembled from ``gather_scalars``. With D=1 this reduces
     bitwise to the single-domain solver (offsets are exact zeros).
     """
-    ngl = rho.shape[0]
-    ncl = ngl - 1                       # owned nodes per domain (non-overlap)
-    d = 1
-    for a in axis_names:
-        d *= mesh.shape[a]
-    r = rank(axis_names)
-    earlier = jnp.arange(d) < r         # domains left of mine
+    with tracing.phase_scope("halo/poisson"):
+        ngl = rho.shape[0]
+        ncl = ngl - 1                   # owned nodes per domain (non-overlap)
+        d = 1
+        for a in axis_names:
+            d *= mesh.shape[a]
+        r = rank(axis_names)
+        earlier = jnp.arange(d) < r     # domains left of mine
 
-    f = rho * (dx * dx) / eps0
-    # ---- first prefix: S1_i = sum_{k<=i} f_k ----
-    c1 = jnp.cumsum(f)
-    t1 = c1[ncl - 1]                    # block total over my owned nodes
-    off1 = jnp.sum(jnp.where(earlier, gather_scalars(t1, axis_names), 0.0))
-    s1 = off1 + c1
-    # global f_0 enters every interior equation; broadcast it from domain 0
-    f0 = jax.lax.psum(jnp.where(r == 0, f[0], 0.0), axis_names)
-    inner = s1 - f0                     # sum_{k=1..i} f_k
-    # ---- second prefix: S2_i = sum_{j<=i} inner_j ----
-    c2 = jnp.cumsum(inner)
-    t2 = c2[ncl - 1]
-    t2s = gather_scalars(t2, axis_names)
-    off2 = jnp.sum(jnp.where(earlier, t2s, 0.0))
-    s2 = off2 + c2
-    # S2_{i-1}: shift by one; the carry-in IS S2 at my left edge minus one
-    s2m1 = jnp.concatenate([off2[None], s2[:-1]])
+        f = rho * (dx * dx) / eps0
+        # ---- first prefix: S1_i = sum_{k<=i} f_k ----
+        c1 = jnp.cumsum(f)
+        t1 = c1[ncl - 1]                # block total over my owned nodes
+        off1 = jnp.sum(
+            jnp.where(earlier, gather_scalars(t1, axis_names), 0.0))
+        s1 = off1 + c1
+        # global f_0 enters every interior equation; broadcast from domain 0
+        f0 = jax.lax.psum(jnp.where(r == 0, f[0], 0.0), axis_names)
+        inner = s1 - f0                 # sum_{k=1..i} f_k
+        # ---- second prefix: S2_i = sum_{j<=i} inner_j ----
+        c2 = jnp.cumsum(inner)
+        t2 = c2[ncl - 1]
+        t2s = gather_scalars(t2, axis_names)
+        off2 = jnp.sum(jnp.where(earlier, t2s, 0.0))
+        s2 = off2 + c2
+        # S2_{i-1}: shift by one; the carry-in IS S2 at my left edge minus one
+        s2m1 = jnp.concatenate([off2[None], s2[:-1]])
 
-    n = d * ncl                         # ng_global - 1
-    s2_last = jnp.sum(t2s)              # S2 at global node ng-2
-    g0 = (phi_right - phi_left + s2_last) / n
-    i_glob = (r * ncl + jnp.arange(ngl)).astype(f.dtype)
-    phi = phi_left + i_glob * g0 - s2m1
-    # enforce boundaries exactly against rounding (edge domains only)
-    phi = phi.at[0].set(jnp.where(r == 0, phi_left, phi[0]))
-    phi = phi.at[-1].set(jnp.where(r == d - 1, phi_right, phi[-1]))
-    return phi
+        n = d * ncl                     # ng_global - 1
+        s2_last = jnp.sum(t2s)          # S2 at global node ng-2
+        g0 = (phi_right - phi_left + s2_last) / n
+        i_glob = (r * ncl + jnp.arange(ngl)).astype(f.dtype)
+        phi = phi_left + i_glob * g0 - s2m1
+        # enforce boundaries exactly against rounding (edge domains only)
+        phi = phi.at[0].set(jnp.where(r == 0, phi_left, phi[0]))
+        phi = phi.at[-1].set(jnp.where(r == d - 1, phi_right, phi[-1]))
+        return phi
 
 
 def efield_halo(phi: Array, dx: float, axis_names, mesh: Mesh,
                 is_first: Array, is_last: Array) -> Array:
     """E = -dphi/dx: centered with exchanged phi halos, one-sided at walls."""
-    hl, hr = neighbor_vals(phi[1], phi[-2], axis_names, mesh,
-                           is_first, is_last)
-    ext = jnp.concatenate([hl[None], phi, hr[None]])
-    e = -(ext[2:] - ext[:-2]) / (2.0 * dx)
-    e = e.at[0].set(jnp.where(is_first, -(phi[1] - phi[0]) / dx, e[0]))
-    e = e.at[-1].set(jnp.where(is_last, -(phi[-1] - phi[-2]) / dx, e[-1]))
-    return e
+    with tracing.phase_scope("halo/efield"):
+        hl, hr = neighbor_vals(phi[1], phi[-2], axis_names, mesh,
+                               is_first, is_last)
+        ext = jnp.concatenate([hl[None], phi, hr[None]])
+        e = -(ext[2:] - ext[:-2]) / (2.0 * dx)
+        e = e.at[0].set(jnp.where(is_first, -(phi[1] - phi[0]) / dx, e[0]))
+        e = e.at[-1].set(
+            jnp.where(is_last, -(phi[-1] - phi[-2]) / dx, e[-1]))
+        return e
 
 
 def field_phase(rho_local: Array, *, dx: float, eps0: float,

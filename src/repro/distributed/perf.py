@@ -11,11 +11,25 @@ This module produces the same quantities for the JAX engine:
   production step itself carries no timers; a checkpointed probe is
   recompiled per phase instead (the jit analogue of bracketing Nsight
   ranges around loop sections).
-* ``scaling_metrics`` — attaches speedup and PE to a {domain_count: phases}
+
+  Each checkpoint is an independent timing run, so noise can make a longer
+  pipeline measure *shorter* than its prefix. Raw cumulative medians (with
+  min/max noise bounds) are therefore reported verbatim under
+  ``cumulative``, and the derived per-phase times come from the
+  monotone-consistent envelope: cumulative medians passed through a running
+  max and capped at ``total``. Every derived phase is >= 0, <= total, and
+  the phases sum to total exactly. Where the raw medians were
+  non-monotonic, the violation is *flagged* (``flags``), not silently
+  clamped — and the flag says whether the inversion is inside the observed
+  min/max noise band or beyond it.
+* ``queue_stats`` — per-queue occupancy/skew after a few steps, on a
+  private copy of the state (donation-safe for callers).
+* ``scaling_metrics`` — attaches speedup and PE to a {domain_count: probe}
   table, referenced to the smallest domain count present.
 * ``write_scaling_json`` — the machine-readable ``BENCH_scaling.json``
   artifact that successive PRs accumulate (same contract as
-  ``BENCH_mover.json``).
+  ``BENCH_mover.json``); written atomically (temp file + rename) so an
+  interrupted run never truncates a committed trajectory file.
 
 All times are microseconds of median wall-clock per step, blocking on device
 results — on emulated host devices this measures harness overhead rather
@@ -25,13 +39,15 @@ never mistaken for the paper's.
 
 from __future__ import annotations
 
-import json
 import sys
 import time
 
 import jax
+import jax.numpy as jnp
 
 from repro.distributed import engine as engine_mod
+from repro.obs import tracing
+from repro.obs.metrics import atomic_write_json
 
 # per-phase labels derived from consecutive engine.PHASES checkpoints; the
 # binary-collision menu split ``collide`` out of the old fused
@@ -41,8 +57,9 @@ PHASE_LABELS = ("ingest", "field", "push", "collide", "migrate", "merge",
                 "diag")
 
 
-def _time_fn(fn, *args, warmup: int = 1, iters: int = 3) -> float:
-    """Median wall-time per call in microseconds (blocks on results)."""
+def _time_stats(fn, *args, warmup: int = 1,
+                iters: int = 3) -> dict[str, float]:
+    """{median, min, max} wall-time per call in µs (blocks on results)."""
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
     times = []
@@ -51,29 +68,74 @@ def _time_fn(fn, *args, warmup: int = 1, iters: int = 3) -> float:
         jax.block_until_ready(fn(*args))
         times.append(time.perf_counter() - t0)
     times.sort()
-    return times[len(times) // 2] * 1e6
+    return {"median": times[len(times) // 2] * 1e6,
+            "min": times[0] * 1e6, "max": times[-1] * 1e6}
+
+
+def _consistent_phases(cumulative: dict[str, dict[str, float]]
+                       ) -> tuple[dict[str, float], list[str]]:
+    """Derive per-phase times from cumulative probe stats, consistently.
+
+    Returns ``(phases, flags)``: the monotone-envelope per-phase times
+    (running max of cumulative medians, capped at total — so every phase is
+    in [0, total] and the phases sum to total), and one flag string per raw
+    median inversion, classified against the min/max noise bands.
+    """
+    checkpoints = engine_mod.PHASES[:-1]          # "full" is the total
+    total = cumulative["full"]["median"]
+    flags: list[str] = []
+    prev_name, prev = None, None
+    for name in engine_mod.PHASES:
+        med = cumulative[name]["median"]
+        if prev is not None and med < prev["median"]:
+            # ranges overlap -> plausible timing noise; disjoint -> the
+            # probe itself is suspect (recompilation variance, host load)
+            noise = (cumulative[name]["max"] >= prev["min"])
+            flags.append(
+                f"cumulative[{name}] {med:.0f}us < cumulative[{prev_name}] "
+                f"{prev['median']:.0f}us "
+                + ("(within min/max noise bands)" if noise
+                   else "(beyond min/max noise bands)"))
+        prev_name, prev = name, cumulative[name]
+
+    phases: dict[str, float] = {}
+    env_prev = 0.0
+    for name, label in zip(checkpoints, PHASE_LABELS):
+        env = min(max(cumulative[name]["median"], env_prev), total)
+        phases[label] = env - env_prev
+        env_prev = env
+    phases[PHASE_LABELS[-1]] = total - env_prev   # diag = full - merge
+    return phases, flags
 
 
 def phase_breakdown(ecfg, mesh, *, iters: int = 3, warmup: int = 1,
-                    seed: int = 0, state=None) -> dict[str, float]:
-    """Per-phase step times (µs): field / push / collide / migrate / merge /
-    diag, plus the end-to-end ``total``.
+                    seed: int = 0, state=None) -> dict:
+    """Per-phase step times via cumulative checkpoint probes.
 
-    Probes are undonated and re-fed the same state, so the breakdown can run
-    on a live state without invalidating it.
+    Returns::
+
+        {"phases":     {ingest|field|push|collide|migrate|merge|diag: us},
+         "total":      us,                     # the full-step median
+         "cumulative": {checkpoint: {"median","min","max"}},  # raw probes
+         "flags":      [str, ...]}             # raw-median inversions
+
+    ``phases`` is the monotone-consistent derivation (each phase >= 0,
+    <= total, summing to total); ``cumulative`` keeps the raw measurements
+    so nothing is silently clamped. Probes are undonated and re-fed the
+    same state, so the breakdown can run on a live state without
+    invalidating it.
     """
     if state is None:
         state = engine_mod.init_engine_state(ecfg, mesh, seed)
-    cum = {}
+    cumulative = {}
     for upto in engine_mod.PHASES:
         fn = engine_mod.make_engine_step(ecfg, mesh, upto=upto, donate=False)
-        cum[upto] = _time_fn(fn, state, warmup=warmup, iters=iters)
-    phases = {PHASE_LABELS[0]: cum[engine_mod.PHASES[0]]}
-    for prev, cur, label in zip(engine_mod.PHASES, engine_mod.PHASES[1:],
-                                PHASE_LABELS[1:]):
-        phases[label] = max(cum[cur] - cum[prev], 0.0)
-    phases["total"] = cum["full"]
-    return phases
+        with tracing.host_span(f"perf/probe/{upto}"):
+            cumulative[upto] = _time_stats(fn, state, warmup=warmup,
+                                           iters=iters)
+    phases, flags = _consistent_phases(cumulative)
+    return {"phases": phases, "total": cumulative["full"]["median"],
+            "cumulative": cumulative, "flags": flags}
 
 
 def queue_stats(ecfg, mesh, *, steps: int = 3, seed: int = 0,
@@ -83,14 +145,18 @@ def queue_stats(ecfg, mesh, *, steps: int = 3, seed: int = 0,
     Returns ``{"queue_occ": {species: [per-queue alive counts]},
     "queue_skew": {species: worst-domain max-min}}`` from the engine's own
     diagnostics — the observable the ``rebalance_every`` knob bounds.
+
+    The step loop always donates, but only ever a private state: one built
+    here, or a copy of the caller's (a donated buffer is invalidated, and
+    the caller's state must survive the probe).
     """
     import numpy as np
 
-    owns_state = state is None
-    if owns_state:
+    if state is None:
         state = engine_mod.init_engine_state(ecfg, mesh, seed)
-    # donate only a state we created: a caller-provided one must stay valid
-    step = engine_mod.make_engine_step(ecfg, mesh, donate=owns_state)
+    else:
+        state = jax.tree.map(jnp.copy, state)
+    step = engine_mod.make_engine_step(ecfg, mesh, donate=True)
     diag = {}
     for _ in range(max(steps, 1)):
         state, diag = step(state)
@@ -101,19 +167,26 @@ def queue_stats(ecfg, mesh, *, steps: int = 3, seed: int = 0,
     return {"queue_occ": occ, "queue_skew": skew}
 
 
-def scaling_metrics(per_domain: dict[int, dict[str, float]]) -> dict:
-    """Attach speedup and PE = T_ref / (D * T_D) to a phase-time table.
+def scaling_metrics(per_domain: dict[int, dict]) -> dict:
+    """Attach speedup and PE = T_ref / (D * T_D) to a probe table.
 
-    ``per_domain`` maps domain count -> phase dict (must contain 'total');
-    the reference T_1 is the smallest domain count present (normally 1).
+    ``per_domain`` maps domain count -> ``phase_breakdown`` result; the
+    reference T_1 is the smallest domain count present (normally 1). The
+    derived phases, the raw cumulative probes and any probe flags are
+    carried through per domain count.
     """
     ref_d = min(per_domain)
     t_ref = per_domain[ref_d]["total"] * ref_d
     out = {}
     for dcount in sorted(per_domain):
-        t_d = per_domain[dcount]["total"]
+        probe = per_domain[dcount]
+        t_d = probe["total"]
         out[dcount] = {
-            "phases": dict(per_domain[dcount]),
+            "phases": dict(probe["phases"]),
+            "total": t_d,
+            "cumulative_us": {k: dict(v)
+                              for k, v in probe["cumulative"].items()},
+            "probe_flags": list(probe.get("flags", ())),
             "speedup": t_ref / t_d if t_d else float("nan"),
             "parallel_efficiency": (t_ref / (dcount * t_d) if t_d
                                     else float("nan")),
@@ -122,7 +195,5 @@ def scaling_metrics(per_domain: dict[int, dict[str, float]]) -> dict:
 
 
 def write_scaling_json(path: str, payload: dict) -> None:
-    with open(path, "w") as fh:
-        json.dump(payload, fh, indent=2, sort_keys=True)
-        fh.write("\n")
+    atomic_write_json(path, payload)
     print(f"# wrote {path}", file=sys.stderr)

@@ -25,6 +25,15 @@ cell so the queue slices stay cell-striped. If the process exposes
 fewer jax devices than --domains, emulated host devices are requested via
 XLA_FLAGS before jax initializes (a TPU slice provides real ones
 natively). --phases prints the per-phase timing breakdown.
+
+Observability (``repro.obs``): --profile-dir DIR captures a profiler trace
+of the run (``jax.profiler.start_trace``; open in TensorBoard/Perfetto —
+the engine's named phase scopes appear as ranges); --metrics-jsonl FILE
+streams one structured metrics record per engine step (schema in
+``docs/observability.md``); --autotune lets the online controller retune
+the engine knobs (async_n, migration/birth budgets, rebalance triggers)
+from the measured stream between steps. The last two force the engine
+path even at --domains 1.
 """
 
 from __future__ import annotations
@@ -72,6 +81,16 @@ def main() -> None:
                          "(single-domain only)")
     ap.add_argument("--phases", action="store_true",
                     help="print the per-phase timing breakdown (multi-domain)")
+    ap.add_argument("--profile-dir", default="",
+                    help="capture a jax profiler trace of the run into this "
+                         "directory (TensorBoard/Perfetto)")
+    ap.add_argument("--metrics-jsonl", default="",
+                    help="stream per-step engine metrics records to this "
+                         "JSONL file (engine path; schema in "
+                         "docs/observability.md)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="retune the engine knobs online from the metrics "
+                         "stream (engine path)")
     args = ap.parse_args()
 
     if args.domains > 1:
@@ -108,14 +127,23 @@ def main() -> None:
         menu = tuple(m for m in args.collisions.split(",") if m)
         cfg = dataclasses.replace(cfg,
                                   collisions=make_collision_menu(menu))
+    from repro.obs import MetricsStream, tracing
+
+    want_stream = bool(args.metrics_jsonl or args.autotune)
+    profile_dir = args.profile_dir or None
     t0 = time.perf_counter()
     mesh = ecfg = None
     if (args.domains == 1 and args.async_n == 1
             and args.rebalance_every == 0 and args.rebalance_skew == 0
-            and not args.cell_order):
+            and not args.cell_order and not want_stream):
         state = pic.init_state(cfg, 0)
-        final, diags = jax.block_until_ready(
-            jax.jit(lambda s: pic.run(cfg, args.steps, state=s))(state))
+        fn = jax.jit(lambda s: pic.run(cfg, args.steps, state=s))
+        if profile_dir:
+            # keep the (huge) XLA compile out of the captured trace: the
+            # profile should show the run's phase ranges, not the compiler
+            fn = fn.lower(state).compile()
+        with tracing.trace_session(profile_dir):
+            final, diags = jax.block_until_ready(fn(state))
         # count from the final state, not the diag trace: with
         # --diag-every K the trace holds zeros on off-steps
         counts = {f"{sc.name}/count": int(buf.count())
@@ -132,12 +160,45 @@ def main() -> None:
                                   max_births=args.max_births,
                                   rebalance_every=args.rebalance_every,
                                   rebalance_skew=args.rebalance_skew,
-                                  cell_order=args.cell_order)
+                                  cell_order=args.cell_order,
+                                  metrics=want_stream)
         state = engine.init_engine_state(ecfg, mesh, 0)
-        step = engine.make_engine_step(ecfg, mesh)
-        for _ in range(args.steps):
-            state, diag = step(state)
-        jax.block_until_ready(state.species[0].x)
+        stream = None
+        if want_stream:
+            stream = MetricsStream(
+                jsonl_path=args.metrics_jsonl or None,
+                config={"domains": args.domains,
+                        "async_n": args.async_n,
+                        "max_births": args.max_births,
+                        "rebalance_every": args.rebalance_every,
+                        "rebalance_skew": args.rebalance_skew,
+                        "steps": args.steps,
+                        "autotune": bool(args.autotune)})
+        if args.autotune:
+            from repro.obs.autotune import AutoTuner
+            tuner = AutoTuner(ecfg, mesh, stream=stream)
+            with tracing.trace_session(profile_dir):
+                for _ in range(args.steps):
+                    state, diag = tuner.run_step(state)
+            ecfg = tuner.ecfg
+            for line in tuner.log:
+                print("autotune:", line)
+        else:
+            step = engine.make_engine_step(ecfg, mesh)
+            if profile_dir:
+                step = step.lower(state).compile()  # compile outside trace
+            with tracing.trace_session(profile_dir):
+                for _ in range(args.steps):
+                    ts = time.perf_counter()
+                    state, diag = step(state)
+                    if stream is not None:
+                        jax.block_until_ready(diag)
+                        stream.record(
+                            diag, wall_us=(time.perf_counter() - ts) * 1e6)
+                jax.block_until_ready(state.species[0].x)
+        if stream is not None:
+            print("metrics:", stream.summary())
+            stream.close()
         counts = {k: int(np.asarray(v)) for k, v in diag.items()
                   if k.endswith("/count")}
         sources = {k: int(np.asarray(v)) for k, v in diag.items()
@@ -149,6 +210,8 @@ def main() -> None:
         balance = {k: np.asarray(v).tolist() for k, v in diag.items()
                    if k.endswith(("/queue_occ", "/queue_skew"))}
     wall = time.perf_counter() - t0
+    if profile_dir:
+        print(f"profiler trace written to {profile_dir}")
     print(f"{args.steps} steps, {args.domains} domain(s), "
           f"async_n={args.async_n}, rebalance_every={args.rebalance_every}, "
           f"strategy={args.strategy}: {wall:.2f}s "
@@ -163,9 +226,12 @@ def main() -> None:
                   "--async-n > 1 (the single-domain run above used the "
                   "plain hot loop)")
         else:
-            phases = perf.phase_breakdown(ecfg, mesh, iters=3, warmup=1)
+            probe = perf.phase_breakdown(ecfg, mesh, iters=3, warmup=1)
             print("per-phase (us/step):",
-                  {k: round(v, 1) for k, v in phases.items()})
+                  {k: round(v, 1) for k, v in probe["phases"].items()},
+                  f"total={probe['total']:.1f}")
+            for flag in probe["flags"]:
+                print("probe flag:", flag)
 
 
 if __name__ == "__main__":

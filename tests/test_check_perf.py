@@ -1,0 +1,127 @@
+"""The CI perf-regression gate (``scripts/check_perf.py``): accepts the
+committed trajectory, rejects injected regressions and the structural
+inconsistencies the old differencing probe used to ship."""
+
+import copy
+import importlib.util
+import json
+import os
+import tempfile
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+
+spec = importlib.util.spec_from_file_location(
+    "check_perf", os.path.join(REPO, "scripts", "check_perf.py"))
+check_perf = importlib.util.module_from_spec(spec)
+spec.loader.exec_module(check_perf)
+
+
+def _domain(total=100.0, scale=1.0):
+    phases = {"ingest": 5.0, "field": 10.0, "push": 40.0, "collide": 15.0,
+              "migrate": 10.0, "merge": 15.0, "diag": 5.0}
+    phases = {k: v * scale * total / 100.0 for k, v in phases.items()}
+    t = sum(phases.values())
+    cum, acc = {}, 0.0
+    for p in ("ingest", "field", "push", "collide", "migrate", "merge"):
+        acc += phases[p]
+        cum[p] = {"median": acc, "min": acc * 0.9, "max": acc * 1.1}
+    cum["full"] = {"median": t, "min": t * 0.9, "max": t * 1.1}
+    return {"phases": phases, "total": t, "cumulative_us": cum,
+            "probe_flags": [], "speedup": 1.0, "parallel_efficiency": 1.0,
+            "queues": {}}
+
+
+def _payload(totals={"1": 100.0, "2": 120.0, "4": 150.0}):
+    return {
+        "mode": "smoke", "environment": "test",
+        "scenarios": {
+            "transport": {"async_n": 4, "domains": {
+                d: _domain(t) for d, t in totals.items()}},
+        },
+    }
+
+
+def test_structure_accepts_consistent_payload():
+    assert check_perf.check_scaling_structure(_payload()) == []
+
+
+def test_structure_rejects_phase_exceeding_total():
+    """The exact failure the pre-rework artifact shipped: a merge phase
+    larger than the step total."""
+    bad = _payload()
+    dom = bad["scenarios"]["transport"]["domains"]["1"]
+    dom["phases"]["merge"] = dom["total"] * 2.0
+    errs = check_perf.check_scaling_structure(bad)
+    assert any("merge" in e and "exceeds total" in e for e in errs), errs
+    assert any("sum to" in e for e in errs), errs
+
+
+def test_structure_rejects_negatives_and_bad_bounds():
+    bad = _payload()
+    dom = bad["scenarios"]["transport"]["domains"]["2"]
+    dom["phases"]["push"] = -1.0
+    dom["cumulative_us"]["full"]["min"] = dom["cumulative_us"]["full"][
+        "max"] + 1.0
+    dom["speedup"] = float("nan")
+    errs = check_perf.check_scaling_structure(bad)
+    assert any("push" in e and "negative" in e for e in errs), errs
+    assert any("not ordered" in e for e in errs), errs
+    assert any("speedup" in e for e in errs), errs
+
+
+def test_compare_passes_within_band_fails_on_regression():
+    base = _payload()
+    ok = _payload({"1": 300.0, "2": 360.0, "4": 450.0})    # 3x: in band
+    assert check_perf.compare_scaling(base, ok, tolerance=8.0) == []
+    slow = copy.deepcopy(base)
+    dom = slow["scenarios"]["transport"]["domains"]["4"]
+    slow["scenarios"]["transport"]["domains"]["4"] = _domain(
+        dom["total"] * 100.0)                              # injected 100x
+    errs = check_perf.compare_scaling(base, slow, tolerance=8.0)
+    assert len(errs) == 1 and "D=4" in errs[0] and "100.0x" in errs[0], errs
+    # different modes are never comparable (smoke vs full sizes differ)
+    full = dict(base, mode="full")
+    errs = check_perf.compare_scaling(base, full, tolerance=8.0)
+    assert errs and "mode mismatch" in errs[0]
+
+
+def test_compare_mover_uses_dimensionless_speedup():
+    base = {"full_cycle": {"speedup": 2.3}}
+    assert check_perf.compare_mover(base, {"full_cycle": {"speedup": 1.1}},
+                                    band=4.0) == []
+    errs = check_perf.compare_mover(base, {"full_cycle": {"speedup": 0.4}},
+                                    band=4.0)
+    assert errs and "regressed" in errs[0]
+    assert check_perf.compare_mover({}, base, band=4.0)
+
+
+def test_main_gates_end_to_end():
+    """The CLI: exit 0 on a healthy pair, exit 1 on an injected regression
+    or a structurally inconsistent baseline."""
+    with tempfile.TemporaryDirectory() as td:
+        base_p = os.path.join(td, "base.json")
+        fresh_p = os.path.join(td, "fresh.json")
+        json.dump(_payload(), open(base_p, "w"))
+        json.dump(_payload({"1": 120.0, "2": 140.0, "4": 160.0}),
+                  open(fresh_p, "w"))
+        assert check_perf.main(["--scaling-baseline", base_p,
+                                "--scaling-fresh", fresh_p]) == 0
+        json.dump(_payload({"1": 12000.0, "2": 140.0, "4": 160.0}),
+                  open(fresh_p, "w"))
+        assert check_perf.main(["--scaling-baseline", base_p,
+                                "--scaling-fresh", fresh_p]) == 1
+        broken = _payload()
+        broken["scenarios"]["transport"]["domains"]["1"]["phases"][
+            "merge"] = 1e9
+        json.dump(broken, open(base_p, "w"))
+        assert check_perf.main(["--scaling-baseline", base_p]) == 1
+
+
+def test_committed_trajectory_passes_the_gate():
+    """The repo's own BENCH_scaling.json must satisfy the structural
+    contract the gate enforces in CI."""
+    path = os.path.join(REPO, "BENCH_scaling.json")
+    with open(path) as fh:
+        payload = json.load(fh)
+    errs = check_perf.check_scaling_structure(payload, "committed")
+    assert errs == [], errs
