@@ -23,10 +23,18 @@ Three scenarios:
 * ``collisions`` — the binary-collision menu (elastic + charge exchange +
   Coulomb) on the per-cell substrate, ionization off: isolates the
   ``collide`` phase, run with ``cell_order=True`` so the rebalance
-  exercises the BIT1-style counting sort by cell.
+  exercises the BIT1-style counting sort by cell;
+* ``checkpoint`` — checkpoint overhead on the full-churn resilience
+  workload (``make_resilience_config``): median step wall with the async
+  EngineState checkpoint every other step vs the same loop without it,
+  plus the checkpoint payload size and the synchronous device-to-host
+  fetch time (the only part the step loop pays — the npz write is on the
+  writer thread). Its per-domain record is
+  ``{total, baseline_total, overhead_frac, ckpt_bytes, ckpt_fetch_us}``
+  rather than a phase table (``scripts/check_perf.py`` knows both).
 
     PYTHONPATH=src python -m benchmarks.bench_scaling [--smoke] \
-        [--scenario transport|ionization|collisions|all]
+        [--scenario transport|ionization|collisions|checkpoint|all]
 """
 
 from __future__ import annotations
@@ -39,7 +47,7 @@ import sys
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
-SCENARIOS = ("transport", "ionization", "collisions")
+SCENARIOS = ("transport", "ionization", "collisions", "checkpoint")
 
 _PROG = """
 import json
@@ -80,22 +88,98 @@ print("RESULTJSON " + json.dumps({
 """
 
 
+_CKPT_PROG = """
+import json, tempfile, time
+import jax
+import numpy as np
+from repro.configs.pic_bit1 import make_engine_config, make_resilience_config
+from repro.distributed import engine
+from repro.ckpt.checkpoint import Checkpointer
+from repro.launch.mesh import make_debug_mesh
+from repro.runtime import resilience
+
+p = json.loads(%r)
+mesh = make_debug_mesh(data=p["d"], model=1)
+cfg = make_resilience_config(nc=p["nc"], n=p["n"])
+ecfg = make_engine_config(cfg, max_migration=p["m"], async_n=p["async_n"],
+                          max_births=p["max_births"])
+step = engine.make_engine_step(ecfg, mesh)
+
+def timed(ckpt_every, ckpt):
+    state = engine.init_engine_state(ecfg, mesh, 0)
+    state, diag = step(state)              # compile outside the timing
+    jax.block_until_ready(diag)
+    walls, info = [], None
+    for i in range(p["iters"]):
+        t0 = time.perf_counter()
+        state, diag = step(state)
+        if ckpt is not None and (i + 1) %% ckpt_every == 0:
+            info = resilience.save_engine(ckpt, ecfg, mesh, i + 1, state)
+        jax.block_until_ready(diag)
+        walls.append((time.perf_counter() - t0) * 1e6)
+    if ckpt is not None:
+        ckpt.wait()
+    return float(np.median(walls)), info
+
+base, _ = timed(0, None)
+with tempfile.TemporaryDirectory() as tmp:
+    tot, info = timed(p["ckpt_every"], Checkpointer(tmp))
+print("RESULTJSON " + json.dumps({
+    "total": tot, "baseline_total": base,
+    "overhead_frac": max(tot - base, 0.0) / base,
+    "ckpt_bytes": info["bytes"], "ckpt_fetch_us": info["fetch_us"],
+    "ckpt_every": p["ckpt_every"]}))
+"""
+
+
 def _measure(d: int, *, nc: int, n: int, async_n: int, iters: int,
              max_migration: int, rebalance_every: int, scenario: str,
-             max_births: int) -> dict | None:
+             max_births: int, ckpt_every: int = 2) -> dict | None:
     params = json.dumps(dict(d=d, nc=nc, n=n, async_n=async_n, iters=iters,
                              m=max_migration, rebalance_every=rebalance_every,
-                             scenario=scenario, max_births=max_births))
+                             scenario=scenario, max_births=max_births,
+                             ckpt_every=ckpt_every))
+    prog = _CKPT_PROG if scenario == "checkpoint" else _PROG
     env = dict(os.environ)
     env["PYTHONPATH"] = SRC
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={d}"
-    out = subprocess.run([sys.executable, "-c", _PROG % params], env=env,
+    out = subprocess.run([sys.executable, "-c", prog % params], env=env,
                          capture_output=True, text=True, timeout=900)
     for line in out.stdout.splitlines():
         if line.startswith("RESULTJSON "):
             return json.loads(line[len("RESULTJSON "):])
     print(f"# domains={d} FAILED:\n{out.stderr[-2000:]}", file=sys.stderr)
     return None
+
+
+def _sweep_checkpoint(domains, *, nc: int, n: int, async_n: int, iters: int,
+                      max_migration: int, max_births: int,
+                      ckpt_every: int = 2) -> tuple[list[str], dict]:
+    """The checkpoint-overhead sweep (its own record shape — no phases)."""
+    per_domain = {}
+    for d in domains:
+        res = _measure(d, nc=nc, n=n, async_n=async_n, iters=iters,
+                       max_migration=max_migration, rebalance_every=0,
+                       scenario="checkpoint", max_births=max_births,
+                       ckpt_every=ckpt_every)
+        if res is not None:
+            per_domain[d] = res
+    if not per_domain:
+        raise RuntimeError(
+            f"checkpoint bench produced no results for domains={domains} "
+            f"(see stderr above for failures)")
+    payload = {
+        "async_n": async_n, "ckpt_every": ckpt_every,
+        "config": {"nc": nc, "n_per_species": n, "iters": iters,
+                   "max_migration": max_migration,
+                   "max_births": max_births},
+        "domains": {str(d): per_domain[d] for d in per_domain},
+    }
+    rows = [f"engine_ckpt;domains={d};async_n={async_n},"
+            f"{m['total']:.1f},overhead={m['overhead_frac']:.3f};"
+            f"bytes={m['ckpt_bytes']}"
+            for d, m in sorted(per_domain.items())]
+    return rows, payload
 
 
 def sweep(domains=(1, 2, 4, 8), *, nc: int = 4096, n: int = 131_072,
@@ -107,6 +191,10 @@ def sweep(domains=(1, 2, 4, 8), *, nc: int = 4096, n: int = 131_072,
 
     if scenario not in SCENARIOS:
         raise ValueError(f"scenario must be one of {SCENARIOS}")
+    if scenario == "checkpoint":
+        return _sweep_checkpoint(domains, nc=nc, n=n, async_n=async_n,
+                                 iters=iters, max_migration=max_migration,
+                                 max_births=max_births)
     per_domain, per_domain_queues = {}, {}
     engine_knobs = None
     for d in domains:
@@ -172,9 +260,10 @@ def run(domains=(1, 2, 4, 8), *, json_path: str = "BENCH_scaling.json",
 def smoke(json_path: str = "BENCH_scaling.json",
           scenario: str = "all") -> list[str]:
     """CI-sized scaling sweep at the acceptance point: small grid,
-    D in {1, 2, 4}, async_n=4 — by default all three scenarios:
-    transport, the §3.3 MC-ionization workload (the ring-routed source)
-    and the binary-collision menu on the per-cell substrate. 5 timing
+    D in {1, 2, 4}, async_n=4 — by default all four scenarios:
+    transport, the §3.3 MC-ionization workload (the ring-routed source),
+    the binary-collision menu on the per-cell substrate, and the
+    checkpoint-overhead probe on the resilience workload. 5 timing
     iters per probe: at 2 the cumulative differencing was dominated by
     recompile/host noise (the committed breakdown once reported a merge
     phase larger than the total). The single definition of the CI smoke

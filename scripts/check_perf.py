@@ -48,6 +48,24 @@ def _finite_pos(x) -> bool:
     return isinstance(x, (int, float)) and math.isfinite(x) and x > 0
 
 
+def _check_checkpoint_domain(where: str, m: dict) -> list[str]:
+    """Schema of one ``checkpoint`` scenario record: step totals with and
+    without the async EngineState checkpoint, the derived overhead
+    fraction, and the payload size / synchronous fetch time (no phase
+    table — the probe measures the loop, not the pipeline)."""
+    errs: list[str] = []
+    for key in ("total", "baseline_total", "ckpt_bytes"):
+        if not _finite_pos(m.get(key)):
+            errs.append(f"{where}: {key} = {m.get(key)!r} not "
+                        f"finite/positive")
+    for key in ("overhead_frac", "ckpt_fetch_us"):
+        v = m.get(key)
+        if not (isinstance(v, (int, float)) and math.isfinite(v)
+                and v >= 0):
+            errs.append(f"{where}: {key} = {v!r} negative or non-finite")
+    return errs
+
+
 def check_scaling_structure(payload: dict, name: str = "scaling"
                             ) -> list[str]:
     """Internal-consistency errors of one BENCH_scaling.json payload."""
@@ -61,6 +79,9 @@ def check_scaling_structure(payload: dict, name: str = "scaling"
             errs.append(f"{name}:{sc_name}: no domains")
         for d, m in domains.items():
             where = f"{name}:{sc_name}:D={d}"
+            if sc_name == "checkpoint":
+                errs += _check_checkpoint_domain(where, m)
+                continue
             phases = m.get("phases", {})
             total = m.get("total")
             missing = [p for p in PHASE_LABELS if p not in phases]

@@ -23,6 +23,12 @@
 #         the "Quickstart" section of README.md), including an
 #         observability smoke: --profile-dir trace capture + a metrics
 #         JSONL stream validated against the schema.
+# Lane 6: resilience — a 4-device in-process save -> kill -> resume ->
+#         bitwise-compare smoke of the checkpoint/restore layer, plus the
+#         CLI drill: --fail-at-step, --resume at the same D, then an
+#         elastic --resume at a different D. The full matrix (D x async_n,
+#         torn writes, elastic conservation) runs in lane 1 via
+#         tests/test_resilience.py.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -66,3 +72,51 @@ assert not errs, errs
 print(f"metrics smoke: header + {len(steps)} valid step records")
 EOF
 rm -rf ci_profile_smoke ci_metrics_smoke.jsonl BENCH_scaling.fresh.json
+
+# ---- resilience lane ----
+XLA_FLAGS="--xla_force_host_platform_device_count=4" python - <<'EOF'
+import tempfile
+import numpy as np
+import jax
+from repro.ckpt.checkpoint import Checkpointer
+from repro.configs.pic_bit1 import make_engine_config, make_resilience_config
+from repro.distributed import engine
+from repro.launch.mesh import make_debug_mesh
+from repro.runtime import resilience
+from repro.runtime.fault_tolerance import FailureInjector, SimulatedFailure
+
+ecfg = make_engine_config(make_resilience_config(nc=32, n=256), async_n=2,
+                          max_migration=64, max_births=64)
+mesh = make_debug_mesh(data=4, model=1)
+step = engine.make_engine_step(ecfg, mesh)
+ref, _ = resilience.run_engine(
+    ecfg, mesh, engine.init_engine_state(ecfg, mesh, 0), num_steps=6,
+    step_fn=step)
+with tempfile.TemporaryDirectory() as tmp:
+    ck = Checkpointer(tmp)
+    try:
+        resilience.run_engine(
+            ecfg, mesh, engine.init_engine_state(ecfg, mesh, 0), num_steps=6,
+            ckpt=ck, ckpt_every=2,
+            injector=FailureInjector(fail_at_step=4), step_fn=step)
+        raise SystemExit("injector did not fire")
+    except SimulatedFailure:
+        pass
+    step_r, st = resilience.resume_engine(ecfg, mesh, ck)
+    assert step_r == 4, step_r
+    fin, _ = resilience.run_engine(ecfg, mesh, st, num_steps=6, step_fn=step)
+for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(fin)):
+    assert np.array_equal(np.asarray(a), np.asarray(b))
+print("resilience smoke: save -> kill -> resume bitwise OK (D=4, async_n=2)")
+EOF
+
+# ---- resilience CLI drill ----
+rm -rf ci_ckpt_smoke
+python -m repro.launch.pic_run --steps 8 --nc 256 --particles 4096 \
+    --domains 2 --async-n 2 --ckpt-dir ci_ckpt_smoke --ckpt-every 2 \
+    --fail-at-step 5
+python -m repro.launch.pic_run --steps 8 --nc 256 --particles 4096 \
+    --domains 2 --async-n 2 --ckpt-dir ci_ckpt_smoke --resume
+python -m repro.launch.pic_run --steps 10 --nc 256 --particles 4096 \
+    --domains 4 --async-n 2 --ckpt-dir ci_ckpt_smoke --resume
+rm -rf ci_ckpt_smoke

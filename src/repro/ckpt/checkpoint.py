@@ -8,6 +8,13 @@ Async: serialization happens on a writer thread after the arrays are
 fetched to host (device_get is the only sync point, as in production async
 checkpointing); training continues during the file write.
 
+Trees: any pytree flattens to ``{keypath: array}`` via
+``jax.tree_util.tree_flatten_with_path`` — nested dicts, (named)tuples and
+registered dataclasses (the engine's ``EngineState``/``FreeSlotRing``/
+``PendingArrivals``) all round-trip. Dtypes npz cannot hold natively
+(bfloat16 et al.) are stored as float32 with the true dtype recorded in
+the manifest, so ``restore`` is bitwise even without a ``like`` tree.
+
 Reshard-on-restore: arrays are stored replicated-logical; ``restore`` lays
 them out with whatever NamedShardings the *current* mesh dictates — this is
 the elastic-scaling path (runtime/elastic.py) and the hot-spare recovery
@@ -16,38 +23,76 @@ path (DESIGN.md §6).
 
 from __future__ import annotations
 
+import io
 import json
 import os
 import threading
+import time
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.tree_util import (DictKey, FlattenedIndexKey, GetAttrKey,
+                           SequenceKey, tree_flatten_with_path)
 
 SEP = "/"
 
 
+def _key_str(entry: Any) -> str:
+    """One keypath entry -> one path component (stable across jax trees)."""
+    if isinstance(entry, DictKey):
+        return str(entry.key)
+    if isinstance(entry, SequenceKey):
+        return str(entry.idx)
+    if isinstance(entry, GetAttrKey):
+        return entry.name
+    if isinstance(entry, FlattenedIndexKey):
+        return str(entry.key)
+    return str(entry)           # future key kinds: best-effort repr
+
+
+def _path_str(keypath: tuple) -> str:
+    return SEP.join(_key_str(e) for e in keypath)
+
+
+def _storable(arr: np.ndarray) -> tuple[np.ndarray, str | None]:
+    """npz cannot round-trip ml_dtypes (bf16 et al.): store f32 and record
+    the true dtype (f32 holds every bf16 exactly, so the cast back is
+    bitwise)."""
+    if arr.dtype.kind == "V" or str(arr.dtype) == "bfloat16":
+        return arr.astype(np.float32), str(arr.dtype)
+    return arr, None
+
+
+def _flatten_with_dtypes(tree: Any) -> tuple[dict[str, np.ndarray],
+                                             dict[str, str]]:
+    leaves, _ = tree_flatten_with_path(tree)
+    flat: dict[str, np.ndarray] = {}
+    dtypes: dict[str, str] = {}
+    for keypath, leaf in leaves:
+        key = _path_str(keypath)
+        if key in flat:
+            raise ValueError(f"duplicate checkpoint key {key!r}")
+        arr, true_dtype = _storable(np.asarray(leaf))
+        flat[key] = arr
+        if true_dtype is not None:
+            dtypes[key] = true_dtype
+    return flat, dtypes
+
+
 def _flatten(tree: Any) -> dict[str, np.ndarray]:
-    flat = {}
+    return _flatten_with_dtypes(tree)[0]
 
-    def walk(path, node):
-        if isinstance(node, dict):
-            for k, v in node.items():
-                walk(path + (str(k),), v)
-        else:
-            arr = np.asarray(node)
-            if arr.dtype.kind == "V" or str(arr.dtype) == "bfloat16":
-                # npz cannot round-trip ml_dtypes (bf16 et al.): store f32,
-                # restore() casts back through `like`
-                arr = np.asarray(node, dtype=np.float32)
-            flat[SEP.join(path)] = arr
 
-    walk((), tree)
-    return flat
+def _cast_true(flat: dict[str, np.ndarray],
+               dtypes: dict[str, str]) -> dict[str, np.ndarray]:
+    return {k: (v.astype(dtypes[k]) if k in dtypes else v)
+            for k, v in flat.items()}
 
 
 def _unflatten(flat: dict[str, np.ndarray]) -> Any:
+    """Rebuild a *nested dict* from flat keys (structure-free restore)."""
     tree: dict = {}
     for key, val in flat.items():
         parts = key.split(SEP)
@@ -58,34 +103,75 @@ def _unflatten(flat: dict[str, np.ndarray]) -> Any:
     return tree
 
 
+def _unflatten_like(flat: dict[str, np.ndarray], like: Any) -> Any:
+    """Rebuild with ``like``'s exact pytree structure (dataclasses,
+    namedtuples, ...). Strict: the stored and expected key sets must match
+    — a silent drop of stored leaves was how restore bugs used to hide."""
+    ref_leaves, treedef = tree_flatten_with_path(like)
+    ref_keys = [_path_str(kp) for kp, _ in ref_leaves]
+    missing = sorted(set(ref_keys) - set(flat))
+    extra = sorted(set(flat) - set(ref_keys))
+    if missing or extra:
+        raise ValueError(
+            "checkpoint does not match the `like` tree: "
+            f"missing keys {missing[:8]}{'...' if len(missing) > 8 else ''}, "
+            f"extra keys {extra[:8]}{'...' if len(extra) > 8 else ''}")
+    leaves = []
+    for key, (_, ref) in zip(ref_keys, ref_leaves):
+        arr = np.asarray(flat[key])
+        ref_shape = tuple(getattr(ref, "shape", arr.shape))
+        if ref_shape != arr.shape:
+            raise ValueError(
+                f"checkpoint leaf {key!r} has shape {arr.shape}, expected "
+                f"{ref_shape} — device/capacity layout changed; use the "
+                "elastic restore path (runtime/elastic.py)")
+        leaves.append(arr.astype(getattr(ref, "dtype", arr.dtype)))
+    return jax.tree.unflatten(treedef, leaves)
+
+
 class Checkpointer:
     def __init__(self, directory: str):
         self.dir = directory
         os.makedirs(directory, exist_ok=True)
         self._thread: threading.Thread | None = None
+        self.last_write_us: float = 0.0
 
     # ------------------------------------------------------------- save
-    def save(self, step: int, tree: Any, blocking: bool = False) -> None:
-        """Fetch to host synchronously, write asynchronously."""
-        host = {k: np.asarray(v) for k, v in _flatten(tree).items()}
+    def save(self, step: int, tree: Any, blocking: bool = False,
+             meta: dict | None = None) -> dict:
+        """Fetch to host synchronously, write asynchronously.
+
+        Returns ``{"bytes": payload size, "fetch_us": host-fetch time}`` —
+        the synchronous cost the step loop actually paid; the file write
+        happens off-thread (its duration lands in ``last_write_us``).
+        """
+        t0 = time.perf_counter()
+        flat, dtypes = _flatten_with_dtypes(tree)
+        host = {k: np.asarray(v) for k, v in flat.items()}
+        fetch_us = (time.perf_counter() - t0) * 1e6
+        nbytes = int(sum(v.nbytes for v in host.values()))
         self.wait()                      # one outstanding write at a time
 
         def write():
+            t1 = time.perf_counter()
             path = os.path.join(self.dir, f"step_{step:08d}")
             os.makedirs(path, exist_ok=True)
             np.savez(os.path.join(path, "arrays.npz"), **host)
             manifest = {"step": step, "keys": sorted(host),
+                        "dtypes": dtypes, "meta": meta or {},
                         "complete": True}
             tmp = os.path.join(path, "manifest.tmp")
             with open(tmp, "w") as f:
                 json.dump(manifest, f)
             os.replace(tmp, os.path.join(path, "manifest.json"))
+            self.last_write_us = (time.perf_counter() - t1) * 1e6
 
         if blocking:
             write()
         else:
             self._thread = threading.Thread(target=write, daemon=True)
             self._thread.start()
+        return {"bytes": nbytes, "fetch_us": fetch_us}
 
     def wait(self) -> None:
         if self._thread is not None:
@@ -93,22 +179,29 @@ class Checkpointer:
             self._thread = None
 
     # ---------------------------------------------------------- restore
+    def _manifest(self, step: int) -> dict:
+        mpath = os.path.join(self.dir, f"step_{step:08d}", "manifest.json")
+        with open(mpath) as f:
+            return json.load(f)
+
     def latest_step(self) -> int | None:
         steps = []
         for name in os.listdir(self.dir):
             mpath = os.path.join(self.dir, name, "manifest.json")
             if name.startswith("step_") and os.path.exists(mpath):
-                with open(mpath) as f:
-                    m = json.load(f)
+                try:
+                    with open(mpath) as f:
+                        m = json.load(f)
+                except (json.JSONDecodeError, OSError):
+                    continue             # torn manifest: not a valid step
                 if m.get("complete"):
                     steps.append(m["step"])
         return max(steps) if steps else None
 
-    def restore(self, step: int | None = None, shardings: Any = None,
-                like: Any = None) -> tuple[int, Any]:
-        """Load a checkpoint; lay arrays out per `shardings` (same tree
-        structure) if given, else as host numpy converted to jax arrays.
-        `like` (optional pytree) restores dtypes (e.g. bf16 params)."""
+    def restore_flat(self, step: int | None = None
+                     ) -> tuple[int, dict[str, np.ndarray], dict]:
+        """Load one checkpoint as ``{keypath: host array}`` (true dtypes
+        restored from the manifest) plus the manifest itself."""
         if step is None:
             step = self.latest_step()
             if step is None:
@@ -116,11 +209,24 @@ class Checkpointer:
         path = os.path.join(self.dir, f"step_{step:08d}", "arrays.npz")
         with np.load(path) as z:
             flat = {k: z[k] for k in z.files}
-        tree = _unflatten(flat)
+        try:
+            manifest = self._manifest(step)
+        except (FileNotFoundError, json.JSONDecodeError):
+            manifest = {"step": step, "dtypes": {}, "meta": {}}
+        return step, _cast_true(flat, manifest.get("dtypes", {})), manifest
+
+    def restore(self, step: int | None = None, shardings: Any = None,
+                like: Any = None) -> tuple[int, Any]:
+        """Load a checkpoint; lay arrays out per `shardings` (same tree
+        structure) if given, else as host numpy converted to jax arrays.
+        `like` (a pytree of arrays or ShapeDtypeStructs) rebuilds the exact
+        stored structure — dataclasses, namedtuples — and restores dtypes;
+        stored leaves absent from `like` (or vice versa) raise."""
+        step, flat, _ = self.restore_flat(step)
         if like is not None:
-            tree = jax.tree.map(
-                lambda ref, arr: np.asarray(arr).astype(ref.dtype), like,
-                tree)
+            tree = _unflatten_like(flat, like)
+        else:
+            tree = _unflatten(flat)
         if shardings is not None:
             tree = jax.tree.map(
                 lambda arr, sh: jax.device_put(jnp.asarray(arr), sh), tree,
@@ -128,3 +234,15 @@ class Checkpointer:
         else:
             tree = jax.tree.map(jnp.asarray, tree)
         return step, tree
+
+
+def roundtrip_bytes(tree: Any) -> Any:
+    """Flatten -> in-memory npz -> unflatten, preserving dtypes — the pure
+    serialization round-trip, used by the property tests (no filesystem)."""
+    flat, dtypes = _flatten_with_dtypes(tree)
+    buf = io.BytesIO()
+    np.savez(buf, **flat)
+    buf.seek(0)
+    with np.load(buf) as z:
+        loaded = {k: z[k] for k in z.files}
+    return _unflatten_like(_cast_true(loaded, dtypes), tree)

@@ -92,6 +92,34 @@ def make_see_config(nc: int = 4096, n: int = 262_144,
         emission_weight=emission_weight)
 
 
+def make_resilience_config(nc: int = 64, n: int = 1024,
+                           strategy: str = "fused",
+                           emission_yield: float = 0.7,
+                           field_solve: bool = True,
+                           diag_every: int = 1) -> pic.PICConfig:
+    """The full-churn workload the resilience tests checkpoint: absorbing
+    walls + SEE + MC ionization + the whole collision menu, with equal
+    species capacities (one capacity group — the engine's collide/SEE
+    paths assume the stacked layout) and the field solve ON so the carried
+    rho rides along in ``PICState`` under ``strategy='fused'``. Every kind
+    of state the checkpoint must capture — rings, pending migration AND
+    birth blocks, carried rho, per-domain RNG keys — is exercised."""
+    cap = 2 * n
+    species = (
+        pic.SpeciesConfig("e", -1.0, 1.0, cap, n, vth=1.0),
+        pic.SpeciesConfig("D+", 1.0, 3672.0, cap, n, vth=0.02),
+        pic.SpeciesConfig("D", 0.0, 3672.0, cap, n, vth=0.05),
+    )
+    return pic.PICConfig(
+        nc=nc, dx=1.0, dt=0.5, species=species, field_solve=field_solve,
+        boundary="absorb", strategy=strategy,
+        collisions=make_collision_menu(),
+        ionization=(2, 0, 1), ionization_rate=5e-3, ionization_vth_e=1.0,
+        wall_emission=((0, 0),), emission_yield=emission_yield,
+        emission_vth=0.5, diag_every=diag_every,
+    )
+
+
 # the menu aliases the launcher's --collisions flag accepts
 COLLISION_MENU = ("elastic", "cx", "coulomb")
 

@@ -107,7 +107,8 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, PartitionSpec as P
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import boundaries, collisions, diagnostics, mover
 from repro.core.grid import (Grid1D, deposit_density, deposit_stacked,
@@ -304,13 +305,27 @@ def _see_pairs(cfg: PICConfig) -> tuple[tuple[int, int], ...]:
     return ()
 
 
+def _local_cap_d(ecfg: EngineConfig, sc, d: int) -> int:
+    """``EngineConfig.local_cap`` for a domain count rather than a mesh —
+    the elastic-restore path reasons about the *checkpointed* D, for which
+    no mesh exists on this host."""
+    if ecfg.species_capacity_local is not None:
+        return ecfg.species_capacity_local
+    assert sc.capacity % d == 0, (sc.capacity, d)
+    return sc.capacity // d
+
+
+def _capacity_groups_d(ecfg: EngineConfig, d: int) -> list[tuple[int, ...]]:
+    by_cap: dict[int, list[int]] = {}
+    for i, sc in enumerate(ecfg.pic.species):
+        by_cap.setdefault(_local_cap_d(ecfg, sc, d), []).append(i)
+    return [tuple(v) for v in by_cap.values()]
+
+
 def _capacity_groups(ecfg: EngineConfig, mesh: Mesh) -> list[tuple[int, ...]]:
     """Species indices grouped by equal local capacity: each group is one
     StackedSpecies and one set of async queues."""
-    by_cap: dict[int, list[int]] = {}
-    for i, sc in enumerate(ecfg.pic.species):
-        by_cap.setdefault(ecfg.local_cap(sc, mesh), []).append(i)
-    return [tuple(v) for v in by_cap.values()]
+    return _capacity_groups_d(ecfg, ecfg.num_domains(mesh))
 
 
 def _species_location(groups) -> dict[int, tuple[int, int]]:
@@ -1255,3 +1270,177 @@ def init_engine_state(ecfg: EngineConfig, mesh: Mesh,
     init = halo.shard_map(local_init, mesh=mesh, in_specs=(),
                           out_specs=specs_state, check_vma=False)
     return jax.jit(init)()
+
+
+# ------------------------------------------------------- checkpoint/restore
+#
+# The engine's side of the resilience layer (runtime/resilience.py drives
+# it): `state_shape`/`state_shardings` give the `like` tree and layout for
+# a bitwise typed restore onto the SAME domain count, and
+# `resplit_host`/`elastic_state` are the elastic path onto D' != D —
+# host-side compaction + re-split of the checkpointed queues, then a
+# closed-form sharded rebuild (rings from alive counts, empty pending)
+# that never runs the init-only full free-slot scan.
+
+
+def state_shape(ecfg: EngineConfig, mesh: Mesh) -> EngineState:
+    """Abstract EngineState (ShapeDtypeStructs) for this config on this
+    mesh — the ``like`` tree of a bitwise checkpoint restore."""
+    return jax.eval_shape(lambda: init_engine_state(ecfg, mesh, 0))
+
+
+def state_shardings(ecfg: EngineConfig, mesh: Mesh) -> EngineState:
+    """NamedShardings of the (device-lifted, global) EngineState leaves:
+    leading device axis over the domain axes, step replicated — matches
+    what ``init_engine_state`` produces and ``make_engine_step`` expects."""
+    specs = _state_specs(ecfg, mesh)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def resplit_host(ecfg: EngineConfig, mesh: Mesh,
+                 flat: dict, *, d_old: int):
+    """Host-side elastic re-split of a checkpointed EngineState.
+
+    ``flat`` is the ``{keypath: host array}`` dict of a checkpoint taken at
+    ``d_old`` domains (``Checkpointer.restore_flat``). The steps mirror the
+    retarget/rebalance machinery, on host numpy: flush every in-flight
+    pending row into its pre-claimed slot (exactly the scatter the next
+    ingest would have done), globalize positions, reassign each alive
+    particle to its new domain by position, and compact per new domain
+    (alive first, stable checkpoint order within a domain).
+
+    Returns ``(species, counts)``: per-species dicts of ``(D', cap')``
+    host arrays plus a ``(D', S)`` alive-count matrix — the closed-form
+    inputs ``elastic_state`` rebuilds rings from without any full-capacity
+    scan. Raises ``ValueError`` if a new domain's population exceeds its
+    local capacity (re-split cannot invent headroom).
+    """
+    cfg = ecfg.pic
+    d_new = ecfg.num_domains(mesh)
+    if cfg.nc % d_old != 0 or cfg.nc % d_new != 0:
+        raise ValueError(
+            f"nc={cfg.nc} must divide both the checkpoint domains "
+            f"({d_old}) and the current domains ({d_new})")
+    l_old = (cfg.nc // d_old) * cfg.dx
+    l_new = (cfg.nc // d_new) * cfg.dx
+    nsp = len(cfg.species)
+
+    # typed host buffers, one per species, with pending flushed in
+    bufs = []
+    for i in range(nsp):
+        bufs.append({f: np.array(flat[f"pic/species/{i}/{f}"])
+                     for f in ("x", "v", "w", "alive")})
+    for g, idxs in enumerate(_capacity_groups_d(ecfg, d_old)):
+        if f"pending/{g}/dest" not in flat:
+            continue                      # legacy (use_ring=False) ckpt
+        pend = {f: np.asarray(flat[f"pending/{g}/{f}"])
+                for f in ("x", "v", "w", "alive", "dest")}
+        for j, i in enumerate(idxs):
+            cap_old = bufs[i]["x"].shape[1]
+            ok = pend["alive"][:, j] & (pend["dest"][:, j] < cap_old)
+            for r in range(d_old):
+                dst = pend["dest"][r, j][ok[r]]
+                bufs[i]["x"][r, dst] = pend["x"][r, j][ok[r]]
+                bufs[i]["v"][r, dst] = pend["v"][r, j][ok[r]]
+                bufs[i]["w"][r, dst] = pend["w"][r, j][ok[r]]
+                bufs[i]["alive"][r, dst] = True
+
+    species_out, counts = [], np.zeros((d_new, nsp), np.int32)
+    for i, sc in enumerate(cfg.species):
+        cap_new = _local_cap_d(ecfg, sc, d_new)
+        b = bufs[i]
+        alive = b["alive"].astype(bool)
+        # globalize in f64 (exact for f32 inputs), localize, cast back
+        off = l_old * np.arange(d_old, dtype=np.float64)[:, None]
+        xg = b["x"].astype(np.float64) + off
+        xs, vs, ws = xg[alive], b["v"][alive], b["w"][alive]
+        r_new = np.clip(np.floor(xs / l_new).astype(np.int64), 0, d_new - 1)
+        order = np.argsort(r_new, kind="stable")
+        xs, vs, ws, r_new = xs[order], vs[order], ws[order], r_new[order]
+        xdt = b["x"].dtype
+        xl = (xs - r_new * l_new).astype(xdt)
+        xl = np.clip(xl, xdt.type(0),
+                     np.nextafter(xdt.type(l_new), xdt.type(0)))
+        nx = np.zeros((d_new, cap_new), xdt)
+        nv = np.zeros((d_new, cap_new, 3), b["v"].dtype)
+        nw = np.zeros((d_new, cap_new), b["w"].dtype)
+        na = np.zeros((d_new, cap_new), bool)
+        for r in range(d_new):
+            sel = r_new == r
+            n_r = int(sel.sum())
+            if n_r > cap_new:
+                raise ValueError(
+                    f"species {i}: {n_r} particles land on domain {r} but "
+                    f"the local capacity at D={d_new} is {cap_new}")
+            nx[r, :n_r], nv[r, :n_r] = xl[sel], vs[sel]
+            nw[r, :n_r], na[r, :n_r] = ws[sel], True
+            counts[r, i] = n_r
+        species_out.append({"x": nx, "v": nv, "w": nw, "alive": na})
+    return species_out, counts
+
+
+def elastic_state(ecfg: EngineConfig, mesh: Mesh, species, counts,
+                  key0, step: int = 0) -> EngineState:
+    """Sharded EngineState from host-compacted per-domain buffers.
+
+    ``species``/``counts`` come from ``resplit_host``. Rings are rebuilt in
+    closed form from the alive counts (``ring_from_counts`` — compaction
+    makes the free set a contiguous tail, so no full-capacity scan),
+    pending starts empty, carried rho is re-deposited locally, and the
+    per-domain RNG keys are re-derived as ``fold_in(key0, rank)`` (the same
+    derivation ``init_engine_state`` uses). An elastic restart is therefore
+    deterministic given the checkpoint, but not bitwise-continuous with the
+    pre-failure RNG streams — see docs/resilience.md for the contract.
+    """
+    cfg = ecfg.pic
+    ncl = ecfg.local_nc(mesh)
+    grid_local = Grid1D(nc=ncl, dx=cfg.dx)
+    carried = _carries_rho(ecfg)
+    groups = _capacity_groups(ecfg, mesh)
+    prows = _group_pending_rows(ecfg, groups)
+    step_c = int(step)
+
+    bufs_in = tuple(
+        SpeciesBuffer(x=jnp.asarray(s["x"]), v=jnp.asarray(s["v"]),
+                      w=jnp.asarray(s["w"]), alive=jnp.asarray(s["alive"]))
+        for s in species)
+    counts_in = jnp.asarray(np.asarray(counts), jnp.int32)
+    key_in = jnp.asarray(np.asarray(key0))
+
+    def local(sp, cnts, k0):
+        r = halo.rank(ecfg.axis_names)
+        key = jax.random.fold_in(k0, r)
+        bufs = [jax.tree.map(lambda a: a[0], b) for b in sp]
+        cl = cnts[0]                      # (S,) local alive counts
+        rho = None
+        if carried:
+            rho = jnp.zeros((ncl + 1,), jnp.float32)
+            for idxs in groups:
+                charges = jnp.asarray(
+                    [cfg.species[i].charge for i in idxs], bufs[0].x.dtype)
+                st = stack_species([bufs[i] for i in idxs])
+                rho = rho + deposit_stacked(
+                    grid_local, st.x, st.w, st.alive, charges)
+        pic = _lift(bufs, key, jnp.asarray(step_c, jnp.int32),
+                    rho[None] if carried else None)
+        if not ecfg.use_ring:
+            return EngineState(pic=pic, rings=(), pending=())
+        rings, pending = [], []
+        for g, idxs in enumerate(groups):
+            st = stack_species([bufs[i] for i in idxs])
+            cg = jnp.stack([cl[i] for i in idxs])
+            rings.append(
+                jax.vmap(lambda c: ring_from_counts(c, st.capacity))(cg))
+            pending.append(_empty_pending(
+                len(idxs), prows[g], st.capacity, st.x.dtype))
+        return EngineState(
+            pic=pic, rings=tuple(_lift_tree(rg) for rg in rings),
+            pending=tuple(_lift_tree(p) for p in pending))
+
+    part = P(ecfg.axis_names)
+    in_specs = (tuple(SpeciesBuffer(x=part, v=part, w=part, alive=part)
+                      for _ in bufs_in), part, P())
+    f = halo.shard_map(local, mesh=mesh, in_specs=in_specs,
+                       out_specs=_state_specs(ecfg, mesh), check_vma=False)
+    return jax.jit(f)(bufs_in, counts_in, key_in)

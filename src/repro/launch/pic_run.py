@@ -5,7 +5,8 @@
         [--rebalance-skew T] [--cell-order] [--max-births N] \
         [--see-yield Y] [--collisions elastic,cx,coulomb] \
         [--strategy unified|explicit|async_batched|fused] \
-        [--field-solve] [--diag-every K] [--phases]
+        [--field-solve] [--diag-every K] [--phases] \
+        [--ckpt-dir DIR --ckpt-every K] [--resume] [--fail-at-step N]
 
 --domains > 1 runs the asynchronous multi-device engine
 (``repro.distributed``): the domain's particles are split into --async-n
@@ -34,6 +35,13 @@ streams one structured metrics record per engine step (schema in
 the engine knobs (async_n, migration/birth budgets, rebalance triggers)
 from the measured stream between steps. The last two force the engine
 path even at --domains 1.
+
+Resilience (``repro.runtime.resilience``): --ckpt-dir DIR checkpoints the
+full EngineState asynchronously every --ckpt-every steps; --resume restarts
+from the newest complete checkpoint (bitwise when --domains matches the
+save, elastic re-split otherwise); --fail-at-step N injects a simulated
+failure at step N — the restart drill is to re-run the same command with
+--resume. These flags force the engine path and exclude --autotune.
 """
 
 from __future__ import annotations
@@ -91,7 +99,25 @@ def main() -> None:
     ap.add_argument("--autotune", action="store_true",
                     help="retune the engine knobs online from the metrics "
                          "stream (engine path)")
+    ap.add_argument("--ckpt-dir", default="",
+                    help="checkpoint EngineState into this directory "
+                         "(async write; engine path)")
+    ap.add_argument("--ckpt-every", type=int, default=5,
+                    help="checkpoint cadence in steps (with --ckpt-dir)")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from the newest complete checkpoint in "
+                         "--ckpt-dir (elastic: --domains may differ from "
+                         "the save; see docs/resilience.md)")
+    ap.add_argument("--fail-at-step", type=int, default=-1,
+                    help="inject a simulated failure at this step (restart "
+                         "drill; restart the command with --resume)")
     args = ap.parse_args()
+    resilient = bool(args.ckpt_dir) or args.fail_at_step >= 0
+    if args.resume and not args.ckpt_dir:
+        ap.error("--resume requires --ckpt-dir")
+    if args.autotune and resilient:
+        ap.error("--autotune cannot be combined with the checkpoint flags "
+                 "(the knob retunes would change the state pytree mid-run)")
 
     if args.domains > 1:
         # must happen before jax initializes; a no-op when XLA_FLAGS is
@@ -135,7 +161,7 @@ def main() -> None:
     mesh = ecfg = None
     if (args.domains == 1 and args.async_n == 1
             and args.rebalance_every == 0 and args.rebalance_skew == 0
-            and not args.cell_order and not want_stream):
+            and not args.cell_order and not want_stream and not resilient):
         state = pic.init_state(cfg, 0)
         fn = jax.jit(lambda s: pic.run(cfg, args.steps, state=s))
         if profile_dir:
@@ -174,7 +200,35 @@ def main() -> None:
                         "rebalance_skew": args.rebalance_skew,
                         "steps": args.steps,
                         "autotune": bool(args.autotune)})
-        if args.autotune:
+        if resilient:
+            from repro.ckpt.checkpoint import Checkpointer
+            from repro.runtime import resilience
+            from repro.runtime.fault_tolerance import (FailureInjector,
+                                                       SimulatedFailure)
+            ckpt = Checkpointer(args.ckpt_dir) if args.ckpt_dir else None
+            if args.resume:
+                step0, state = resilience.resume_engine(ecfg, mesh, ckpt)
+                print(f"resumed from checkpoint step {step0} "
+                      f"in {args.ckpt_dir}")
+            inj = (FailureInjector(args.fail_at_step)
+                   if args.fail_at_step >= 0 else None)
+            diag = {}
+            try:
+                with tracing.trace_session(profile_dir):
+                    state, run_diags = resilience.run_engine(
+                        ecfg, mesh, state, num_steps=args.steps, ckpt=ckpt,
+                        ckpt_every=args.ckpt_every, injector=inj,
+                        stream=stream, collect=True)
+                if run_diags:
+                    diag = run_diags[-1]
+            except SimulatedFailure as e:
+                if stream is not None:
+                    stream.close()
+                print(f"simulated failure: {e} — restart the same command "
+                      f"with --resume to continue from the newest "
+                      f"checkpoint")
+                return
+        elif args.autotune:
             from repro.obs.autotune import AutoTuner
             tuner = AutoTuner(ecfg, mesh, stream=stream)
             with tracing.trace_session(profile_dir):

@@ -12,7 +12,9 @@ the sink. One ``StepMetrics`` record per step:
   wall_absorbed|merge_dropped``, MC-source ``n_ionized|birth_overflow|
   <sp>/emitted|emission_overflow``, collision ``coll_*``, and — with
   ``EngineConfig.metrics=True`` — ``<sp>/ring_free`` (free-slot-ring
-  occupancy) and ``<sp>/pending_rows`` (in-flight arrivals/births);
+  occupancy) and ``<sp>/pending_rows`` (in-flight arrivals/births); the
+  resilience loop (``runtime/resilience.py``) adds host-side
+  ``ckpt/bytes|fetch_us|write_us`` on steps that took a checkpoint;
 * ``queues``    — per-species per-queue alive counts (``<sp>/queue_occ``).
 
 Records go to a bounded in-memory ring (the auto-tuner's window) and
@@ -115,14 +117,22 @@ class MetricsStream:
             self._fh.write(json.dumps(header, sort_keys=True) + "\n")
 
     def record(self, diag: dict, *, wall_us: float,
-               step: int | None = None) -> StepMetrics:
+               step: int | None = None,
+               extra: dict | None = None) -> StepMetrics:
         """Append one step's diag (+ measured host wall time) to the stream.
 
         ``step`` defaults to a running index (one per ``record`` call).
+        ``extra`` adds host-side counters the engine cannot see from inside
+        jit — the resilience loop reports checkpoint overhead this way
+        (``ckpt/bytes``, ``ckpt/fetch_us``, ``ckpt/write_us``).
         """
         if step is None:
             step = self.ring[-1].step + 1 if self.ring else 0
         m = from_diag(step, wall_us, diag)
+        if extra:
+            m = dataclasses.replace(
+                m, counters={**m.counters,
+                             **{k: float(v) for k, v in extra.items()}})
         self.ring.append(m)
         if self._fh is not None:
             self._fh.write(json.dumps(m.to_json(), sort_keys=True) + "\n")
@@ -145,7 +155,8 @@ class MetricsStream:
             for k, v in m.counters.items():
                 if k.endswith(("_overflow", "/merge_dropped", "/emitted",
                                "/migrated_left", "/migrated_right",
-                               "/wall_absorbed")) or k == "n_ionized":
+                               "/wall_absorbed")) or k == "n_ionized" \
+                        or k.startswith("ckpt/"):
                     totals[k] = totals.get(k, 0.0) + v
         skew = max((m.counters.get(k, 0.0) for m in self.ring
                     for k in m.counters if k.endswith("/queue_skew")),

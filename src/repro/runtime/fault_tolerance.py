@@ -25,10 +25,22 @@ class SimulatedFailure(RuntimeError):
 
 @dataclasses.dataclass
 class FailureInjector:
+    """Raises once when the loop reaches ``fail_at_step``.
+
+    ``once`` (the default) matches a real node loss: after the restart the
+    process is a different one, so resuming *past* the fence must not
+    re-raise. Set ``once=False`` for tests that want every pass to trip.
+    """
+
     fail_at_step: int | None = None
+    once: bool = True
+    fired: bool = False
 
     def check(self, step: int) -> None:
-        if self.fail_at_step is not None and step == self.fail_at_step:
+        if self.fail_at_step is None or (self.once and self.fired):
+            return
+        if step == self.fail_at_step:
+            self.fired = True
             raise SimulatedFailure(f"injected failure at step {step}")
 
 

@@ -69,6 +69,46 @@ def test_structure_rejects_negatives_and_bad_bounds():
     assert any("speedup" in e for e in errs), errs
 
 
+def _ckpt_domain(total=150.0, baseline=100.0):
+    return {"total": total, "baseline_total": baseline,
+            "overhead_frac": max(total - baseline, 0.0) / baseline,
+            "ckpt_bytes": 1_000_000, "ckpt_fetch_us": 2000.0,
+            "ckpt_every": 2}
+
+
+def test_structure_accepts_checkpoint_scenario():
+    """The checkpoint-overhead scenario carries its own record shape
+    (no phase table) and must pass the structural gate as-is."""
+    p = _payload()
+    p["scenarios"]["checkpoint"] = {
+        "async_n": 4, "ckpt_every": 2,
+        "domains": {"1": _ckpt_domain(), "2": _ckpt_domain(180.0, 120.0)}}
+    assert check_perf.check_scaling_structure(p) == []
+
+
+def test_structure_rejects_broken_checkpoint_records():
+    p = _payload()
+    bad = _ckpt_domain()
+    bad["baseline_total"] = 0.0
+    bad["overhead_frac"] = -0.5
+    del bad["ckpt_bytes"]
+    p["scenarios"]["checkpoint"] = {"async_n": 4, "domains": {"1": bad}}
+    errs = check_perf.check_scaling_structure(p)
+    assert any("baseline_total" in e for e in errs), errs
+    assert any("overhead_frac" in e for e in errs), errs
+    assert any("ckpt_bytes" in e for e in errs), errs
+
+
+def test_compare_includes_checkpoint_totals():
+    base = _payload()
+    base["scenarios"]["checkpoint"] = {"domains": {"1": _ckpt_domain()}}
+    slow = copy.deepcopy(base)
+    slow["scenarios"]["checkpoint"]["domains"]["1"] = _ckpt_domain(
+        total=150.0 * 20, baseline=100.0)
+    errs = check_perf.compare_scaling(base, slow, tolerance=8.0)
+    assert len(errs) == 1 and "checkpoint" in errs[0], errs
+
+
 def test_compare_passes_within_band_fails_on_regression():
     base = _payload()
     ok = _payload({"1": 300.0, "2": 360.0, "4": 450.0})    # 3x: in band
