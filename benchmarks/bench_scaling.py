@@ -12,7 +12,7 @@ physical cores, so this measures harness overhead/correctness, not parallel
 speedup — the JSON records the environment so the numbers are never
 mistaken for the paper's).
 
-Three scenarios:
+The scenarios:
 
 * ``transport`` — migration + halo field solve, no MC sources (the pure
   queue-pipeline workload);
@@ -31,10 +31,16 @@ Three scenarios:
   fetch time (the only part the step loop pays — the npz write is on the
   writer thread). Its per-domain record is
   ``{total, baseline_total, overhead_frac, ckpt_bytes, ckpt_fetch_us}``
-  rather than a phase table (``scripts/check_perf.py`` knows both).
+  rather than a phase table (``scripts/check_perf.py`` knows both);
+* ``ensemble`` — the vmapped ensemble engine (``repro.serve``) sweeping
+  the member width on ONE device: W parameter points per compiled step,
+  every member at a different dt. Its per-domain record (keyed by WIDTH,
+  not domain count) is ``{total, width, members_per_sec, compiles}``;
+  ``compiles`` must be exactly 1 — the compile-once serving contract is
+  part of the perf gate.
 
     PYTHONPATH=src python -m benchmarks.bench_scaling [--smoke] \
-        [--scenario transport|ionization|collisions|checkpoint|all]
+        [--scenario transport|ionization|collisions|checkpoint|ensemble|all]
 """
 
 from __future__ import annotations
@@ -47,7 +53,8 @@ import sys
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
-SCENARIOS = ("transport", "ionization", "collisions", "checkpoint")
+SCENARIOS = ("transport", "ionization", "collisions", "checkpoint",
+             "ensemble")
 
 _PROG = """
 import json
@@ -132,17 +139,59 @@ print("RESULTJSON " + json.dumps({
 """
 
 
+_ENS_PROG = """
+import json, time
+import dataclasses
+import jax
+import jax.numpy as jnp
+import numpy as np
+from repro.configs.pic_bit1 import make_resilience_config
+from repro.core.params import runtime_params
+from repro.serve import ensemble
+
+p = json.loads(%r)
+cfg = make_resilience_config(nc=p["nc"], n=p["n"])
+cfg = dataclasses.replace(cfg, b_field=(0.0, 0.0, 0.02))
+w = p["width"]
+es = ensemble.init_ensemble(cfg, w)
+mk = ensemble.make_member_init(cfg)
+ins = ensemble.make_member_insert(cfg)
+for slot in range(w):
+    # every member at its OWN parameter point: the timing (and the
+    # compiles=1 pin) covers the heterogeneous case the engine exists for
+    rp = runtime_params(cfg, dt=0.3 + 0.05 * slot,
+                        ionization_rate=1e-3 * (slot + 1))
+    es = ins(es, mk(jnp.int32(slot)), rp, jnp.int32(slot))
+step = ensemble.make_ensemble_step(cfg)
+es, diag = step(es)              # compile outside the timing
+jax.block_until_ready(diag)
+walls = []
+for _ in range(p["iters"]):
+    t0 = time.perf_counter()
+    es, diag = step(es)
+    jax.block_until_ready(diag)
+    walls.append((time.perf_counter() - t0) * 1e6)
+tot = float(np.median(walls))
+print("RESULTJSON " + json.dumps({
+    "total": tot, "width": w, "members_per_sec": w / (tot / 1e6),
+    "compiles": step._cache_size()}))
+"""
+
+
 def _measure(d: int, *, nc: int, n: int, async_n: int, iters: int,
              max_migration: int, rebalance_every: int, scenario: str,
              max_births: int, ckpt_every: int = 2) -> dict | None:
     params = json.dumps(dict(d=d, nc=nc, n=n, async_n=async_n, iters=iters,
                              m=max_migration, rebalance_every=rebalance_every,
                              scenario=scenario, max_births=max_births,
-                             ckpt_every=ckpt_every))
-    prog = _CKPT_PROG if scenario == "checkpoint" else _PROG
+                             ckpt_every=ckpt_every, width=d))
+    prog = {"checkpoint": _CKPT_PROG,
+            "ensemble": _ENS_PROG}.get(scenario, _PROG)
     env = dict(os.environ)
     env["PYTHONPATH"] = SRC
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={d}"
+    # the ensemble scenario is single-device by construction (d is a WIDTH)
+    nd = 1 if scenario == "ensemble" else d
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={nd}"
     out = subprocess.run([sys.executable, "-c", prog % params], env=env,
                          capture_output=True, text=True, timeout=900)
     for line in out.stdout.splitlines():
@@ -182,6 +231,33 @@ def _sweep_checkpoint(domains, *, nc: int, n: int, async_n: int, iters: int,
     return rows, payload
 
 
+def _sweep_ensemble(widths, *, nc: int, n: int,
+                    iters: int) -> tuple[list[str], dict]:
+    """The ensemble-width sweep (single device; ``domains`` keys are member
+    widths). Each width measures W heterogeneous parameter points through
+    ONE compiled vmapped step on the full-churn resilience workload."""
+    per_width = {}
+    for w in widths:
+        res = _measure(w, nc=nc, n=n, async_n=1, iters=iters,
+                       max_migration=0, rebalance_every=0,
+                       scenario="ensemble", max_births=0)
+        if res is not None:
+            per_width[w] = res
+    if not per_width:
+        raise RuntimeError(
+            f"ensemble bench produced no results for widths={widths} "
+            f"(see stderr above for failures)")
+    payload = {
+        "config": {"nc": nc, "n_per_species": n, "iters": iters},
+        "domains": {str(w): per_width[w] for w in per_width},
+    }
+    rows = [f"ensemble_step;width={w},{m['total']:.1f},"
+            f"members_per_sec={m['members_per_sec']:.1f};"
+            f"compiles={m['compiles']}"
+            for w, m in sorted(per_width.items())]
+    return rows, payload
+
+
 def sweep(domains=(1, 2, 4, 8), *, nc: int = 4096, n: int = 131_072,
           async_n: int = 2, iters: int = 5, max_migration: int = 8192,
           rebalance_every: int = 0, scenario: str = "transport",
@@ -195,6 +271,12 @@ def sweep(domains=(1, 2, 4, 8), *, nc: int = 4096, n: int = 131_072,
         return _sweep_checkpoint(domains, nc=nc, n=n, async_n=async_n,
                                  iters=iters, max_migration=max_migration,
                                  max_births=max_births)
+    if scenario == "ensemble":
+        # the sweep axis is the member WIDTH, not a device count; keep the
+        # per-member population CI-sized (the vmapped step does W x the work
+        # of one domain on a single device)
+        return _sweep_ensemble(domains, nc=nc, n=min(n, 16_384),
+                               iters=iters)
     per_domain, per_domain_queues = {}, {}
     engine_knobs = None
     for d in domains:
@@ -260,10 +342,12 @@ def run(domains=(1, 2, 4, 8), *, json_path: str = "BENCH_scaling.json",
 def smoke(json_path: str = "BENCH_scaling.json",
           scenario: str = "all") -> list[str]:
     """CI-sized scaling sweep at the acceptance point: small grid,
-    D in {1, 2, 4}, async_n=4 — by default all four scenarios:
+    D in {1, 2, 4}, async_n=4 — by default all five scenarios:
     transport, the §3.3 MC-ionization workload (the ring-routed source),
-    the binary-collision menu on the per-cell substrate, and the
-    checkpoint-overhead probe on the resilience workload. 5 timing
+    the binary-collision menu on the per-cell substrate, the
+    checkpoint-overhead probe on the resilience workload, and the
+    ensemble-width sweep of the vmapped serving engine (the same
+    (1, 2, 4) tuple read as member widths). 5 timing
     iters per probe: at 2 the cumulative differencing was dominated by
     recompile/host noise (the committed breakdown once reported a merge
     phase larger than the total). The single definition of the CI smoke

@@ -66,6 +66,26 @@ def _check_checkpoint_domain(where: str, m: dict) -> list[str]:
     return errs
 
 
+def _check_ensemble_domain(where: str, m: dict) -> list[str]:
+    """Schema of one ``ensemble`` scenario record: the vmapped-step total,
+    the member width it carried, the derived throughput — and the
+    compile-once serving contract: ``compiles`` is the step's jit cache
+    size and must be EXACTLY 1 (a second executable means some parameter
+    leaked back into the static config)."""
+    errs: list[str] = []
+    for key in ("total", "members_per_sec"):
+        if not _finite_pos(m.get(key)):
+            errs.append(f"{where}: {key} = {m.get(key)!r} not "
+                        f"finite/positive")
+    w = m.get("width")
+    if not (isinstance(w, int) and w >= 1):
+        errs.append(f"{where}: width = {w!r} not a positive int")
+    if m.get("compiles") != 1:
+        errs.append(f"{where}: compiles = {m.get('compiles')!r} — the "
+                    f"ensemble step must compile exactly once")
+    return errs
+
+
 def check_scaling_structure(payload: dict, name: str = "scaling"
                             ) -> list[str]:
     """Internal-consistency errors of one BENCH_scaling.json payload."""
@@ -81,6 +101,10 @@ def check_scaling_structure(payload: dict, name: str = "scaling"
             where = f"{name}:{sc_name}:D={d}"
             if sc_name == "checkpoint":
                 errs += _check_checkpoint_domain(where, m)
+                continue
+            if sc_name == "ensemble":
+                errs += _check_ensemble_domain(
+                    f"{name}:{sc_name}:W={d}", m)
                 continue
             phases = m.get("phases", {})
             total = m.get("total")

@@ -29,6 +29,13 @@
 #         elastic --resume at a different D. The full matrix (D x async_n,
 #         torn writes, elastic conservation) runs in lane 1 via
 #         tests/test_resilience.py.
+# Lane 7: serving — the simulation-as-a-service smoke: three sessions at
+#         DISTINCT parameter points through a width-2 ensemble server
+#         (submit -> step -> poll), asserting distinct final diagnostics,
+#         slot reuse, and exactly ONE compile of the vmapped step; plus
+#         the --ensemble CLI demo. The full contract (member-vs-solo
+#         event parity, frozen slots) runs in lane 1 via
+#         tests/test_ensemble.py / tests/test_serve.py.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -109,6 +116,30 @@ for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(fin)):
     assert np.array_equal(np.asarray(a), np.asarray(b))
 print("resilience smoke: save -> kill -> resume bitwise OK (D=4, async_n=2)")
 EOF
+
+# ---- serving lane ----
+python - <<'EOF'
+import numpy as np
+from repro.configs.pic_bit1 import make_resilience_config
+from repro.serve import SimService
+
+svc = SimService(make_resilience_config(nc=64, n=256), width=2)
+a = svc.submit({"dt": 0.3, "ionization_rate": 4e-3}, seed=1, steps=2)
+b = svc.submit({"dt": 0.5, "emission_yield": 0.2}, seed=2, steps=3)
+c = svc.submit({"dt": 0.7}, seed=3, steps=2)          # queued behind a/b
+svc.run_until_drained()
+polls = {s: svc.poll(s) for s in (a, b, c)}
+assert all(p["status"] == "done" for p in polls.values()), polls
+assert polls[c]["slot"] in (0, 1), polls[c]           # reused a freed slot
+kes = [float(np.asarray(p["diag"]["e/ke"]).sum()) for p in polls.values()]
+assert len({round(k, 9) for k in kes}) == 3, kes      # distinct physics
+st = svc.stats()
+assert st["compiles"] == 1, st                        # one executable
+print(f"serving smoke: 3 sessions / 2 slots, distinct diags, "
+      f"compiles={st['compiles']}")
+EOF
+python -m repro.launch.pic_run --steps 2 --nc 256 --particles 4096 \
+    --strategy fused --ensemble 2
 
 # ---- resilience CLI drill ----
 rm -rf ci_ckpt_smoke

@@ -503,7 +503,8 @@ def coulomb_intra(key: Array, sp: SpeciesBuffer, n_cell: Array, grid: Grid1D,
 
 def apply_menu(key: Array, bufs: dict[int, SpeciesBuffer],
                cfgs: Sequence[CollisionConfig], dens: dict[int, Array],
-               grid: Grid1D, dt: float, use_kernel: bool = False
+               grid: Grid1D, dt: float, use_kernel: bool = False,
+               rates: Sequence[Array] | None = None
                ) -> tuple[dict[int, SpeciesBuffer], dict]:
     """Run a collision menu, in order, over a dict of species buffers.
 
@@ -512,23 +513,26 @@ def apply_menu(key: Array, bufs: dict[int, SpeciesBuffer],
     code path either way, so the two cannot diverge. ``dens`` maps the
     ``density_species`` of the menu to their (nc,) cell densities (computed
     once per step from the whole domain — a queue pairs within its own
-    slice but collides at the full-domain rate). Returns (bufs, diag) with
+    slice but collides at the full-domain rate). ``rates`` (optional, one
+    per menu entry, possibly traced) overrides the static ``cc.rate``
+    coefficients — the RuntimeParams path. Returns (bufs, diag) with
     per-kind event counters."""
     diag: dict = {}
-    for cc in cfgs:
+    for k_i, cc in enumerate(cfgs):
+        rate = cc.rate if rates is None else rates[k_i]
         key, sub = jax.random.split(key)
         if cc.kind == "elastic":
             out, n = elastic_scatter(sub, bufs[cc.species], dens[cc.partner],
-                                     grid, cc.rate, dt)
+                                     grid, rate, dt)
             bufs[cc.species] = out
         elif cc.kind == "charge_exchange":
             bi, bn, n = charge_exchange(sub, bufs[cc.species],
                                         bufs[cc.partner], dens[cc.partner],
-                                        grid, cc.rate, dt)
+                                        grid, rate, dt)
             bufs[cc.species], bufs[cc.partner] = bi, bn
         else:
             out, n = coulomb_intra(sub, bufs[cc.species], dens[cc.species],
-                                   grid, cc.rate, dt, use_kernel)
+                                   grid, rate, dt, use_kernel)
             bufs[cc.species] = out
         k = _KIND_DIAG[cc.kind]
         diag[k] = diag.get(k, 0) + n

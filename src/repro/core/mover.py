@@ -74,19 +74,25 @@ class PushResult(NamedTuple):
 
 
 def boris_kick(v: Array, e_x: Array, qm_dt: Array | float,
-               b: tuple[float, float, float] = (0.0, 0.0, 0.0)) -> Array:
-    """Boris rotation push. v: (N, 3); e_x: (N,) field at particles."""
-    bx, by, bz = b
+               b: Array | tuple[float, float, float] = (0.0, 0.0, 0.0)
+               ) -> Array:
+    """Boris rotation push. v: (N, 3); e_x: (N,) field at particles.
+
+    ``b`` may be a static (bx, by, bz) tuple — all-zero skips the rotation
+    at trace time — or a (3,) array (traced runtime value); an array always
+    takes the rotation branch, so callers with a statically-zero field
+    should pass the tuple to keep the cheaper program.
+    """
     half = 0.5 * qm_dt
     vm = v.at[:, 0].add(half * e_x)              # half electric kick
-    if bx == 0.0 and by == 0.0 and bz == 0.0:
-        vp = vm
-    else:
-        t = jnp.asarray([bx, by, bz], v.dtype) * half
+    if isinstance(b, jax.Array) or any(c != 0.0 for c in b):
+        t = jnp.asarray(b, v.dtype) * half
         t2 = jnp.dot(t, t)
         s = 2.0 * t / (1.0 + t2)
         vprime = vm + jnp.cross(vm, t[None, :])
         vp = vm + jnp.cross(vprime, s[None, :])
+    else:
+        vp = vm
     return vp.at[:, 0].add(half * e_x)           # second half kick
 
 
@@ -134,10 +140,17 @@ def _push_core(x: Array, v: Array, alive: Array, e: Array, grid: Grid1D,
 def push_unified(buf: SpeciesBuffer, e: Array, grid: Grid1D, qm: float,
                  dt: float, b: tuple[float, float, float] = (0.0, 0.0, 0.0),
                  boundary: Boundary = "periodic",
-                 gather_mode: str = "take") -> PushResult:
-    """Pure-jnp mover (XLA-managed data movement — the 'unified' strategy)."""
+                 gather_mode: str = "take",
+                 qm_dt: Array | None = None) -> PushResult:
+    """Pure-jnp mover (XLA-managed data movement — the 'unified' strategy).
+
+    ``qm_dt`` (optional, possibly traced) overrides the host-side ``qm*dt``
+    product — the RuntimeParams path supplies it precomputed so the traced
+    step stays bit-identical to the constant-folded one.
+    """
     x, v, alive, hl, hr = _push_core(buf.x, buf.v, buf.alive, e, grid,
-                                     qm * dt, dt, b, boundary, gather_mode)
+                                     qm * dt if qm_dt is None else qm_dt,
+                                     dt, b, boundary, gather_mode)
     diag = _wall_diag(v, buf.w, hl, hr)
     out = dataclasses.replace(buf, x=x, v=v, alive=alive, w=buf.w * alive)
     return PushResult(out, hl, hr, diag)
@@ -162,7 +175,8 @@ def push_fused(buf: SpeciesBuffer, e: Array, grid: Grid1D, qm: float,
                dt: float, b: tuple[float, float, float] = (0.0, 0.0, 0.0),
                boundary: Boundary = "periodic", gather_mode: str = "take",
                deposit_charge: float | None = None,
-               rho_carry: Array | None = None) -> PushResult:
+               rho_carry: Array | None = None,
+               qm_dt: Array | None = None) -> PushResult:
     """Single-pass push+deposit (the 'fused' strategy).
 
     When ``deposit_charge`` is given, the POST-push charge density
@@ -176,6 +190,10 @@ def push_fused(buf: SpeciesBuffer, e: Array, grid: Grid1D, qm: float,
     fold it in without a separate add pass.
     """
     if jax.default_backend() == "tpu":
+        if qm_dt is not None:
+            raise NotImplementedError(
+                "fused Pallas kernel bakes qm/dt as compile-time scalars; "
+                "traced qm_dt is unsupported on TPU")
         from repro.kernels import ops
         x, v, alive, hl, hr, w, rho = ops.fused_push_deposit(
             buf.x, buf.v, buf.alive, buf.w, e, rho_carry, x0=grid.x0,
@@ -188,7 +206,8 @@ def push_fused(buf: SpeciesBuffer, e: Array, grid: Grid1D, qm: float,
                           rho if deposit_charge is not None else None)
 
     x, v, alive, hl, hr = _push_core(buf.x, buf.v, buf.alive, e, grid,
-                                     qm * dt, dt, b, boundary, gather_mode)
+                                     qm * dt if qm_dt is None else qm_dt,
+                                     dt, b, boundary, gather_mode)
     diag = _wall_diag(v, buf.w, hl, hr)
     w = buf.w * alive
     rho = None
@@ -204,7 +223,8 @@ def push_async_batched(buf: SpeciesBuffer, e: Array, grid: Grid1D, qm: float,
                        dt: float, num_batches: int = 4,
                        b: tuple[float, float, float] = (0.0, 0.0, 0.0),
                        boundary: Boundary = "periodic",
-                       gather_mode: str = "take") -> PushResult:
+                       gather_mode: str = "take",
+                       qm_dt: Array | None = None) -> PushResult:
     """Batched mover: scan over particle batches (paper's async extension).
 
     On one device this pipelines HBM traffic per batch; under shard_map the
@@ -228,7 +248,7 @@ def push_async_batched(buf: SpeciesBuffer, e: Array, grid: Grid1D, qm: float,
     def body(carry, sl):
         sbuf = SpeciesBuffer(x=sl[0], v=sl[1], w=sl[2], alive=sl[3])
         out, hl, hr, diag, _ = push_unified(sbuf, e, grid, qm, dt, b,
-                                            boundary, gather_mode)
+                                            boundary, gather_mode, qm_dt)
         acc = jax.tree.map(jnp.add, carry, diag)
         return acc, (out.x, out.v, out.w, out.alive, hl, hr)
 
@@ -237,7 +257,7 @@ def push_async_batched(buf: SpeciesBuffer, e: Array, grid: Grid1D, qm: float,
     first = jax.tree.map(lambda a: a[0], batched)
     diag_shape = jax.eval_shape(
         lambda bb: push_unified(bb, e, grid, qm, dt, b, boundary,
-                                gather_mode).diag, first)
+                                gather_mode, qm_dt).diag, first)
     zero = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), diag_shape)
     diag, (x, v, w, alive, hl, hr) = jax.lax.scan(
         body, zero, (batched.x, batched.v, batched.w, batched.alive))

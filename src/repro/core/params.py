@@ -1,0 +1,118 @@
+"""Traced runtime parameters — the dynamic half of the config split.
+
+``PICConfig`` / ``EngineConfig`` carry everything a run needs, but jit treats
+them as *static*: every distinct value of dt or a collision coefficient means
+a fresh trace + XLA compile. For parameter sweeps (seed x density x SEE-yield
+x rate grids) that compile wall dominates — the profiling companion papers
+put setup/compile ahead of compute for short runs.
+
+``RuntimeParams`` is the traced complement: a registered-pytree dataclass
+holding exactly the scalars a step may vary *without changing the program
+shape* — dt, the per-species dt/qm*dt products, b_field, the MC source
+coefficients and the collision-menu rates. Structure stays static (number of
+species, menu length, strategy, capacities); values ride through jit as
+arrays, so two parameter points share one jaxpr and one executable.
+
+Bitwise contract: all derived products (dt*stride, (q/m)*dt*stride) are
+computed HOST-SIDE in Python float64 and converted to the target dtype once
+— exactly what the static path's constant folding produces — so a traced
+step is bit-identical to the baked-constant step for the same values.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+# PICConfig fields a RuntimeParams override may touch; everything else is a
+# static/compile knob and needs a fresh config (and a fresh compile).
+RUNTIME_FIELDS = ("dt", "ionization_rate", "emission_yield", "b_field")
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("dt", "dts", "qm_dts", "b_field", "ionization_rate",
+                      "emission_yield", "collision_rates"),
+         meta_fields=())
+@dataclasses.dataclass(frozen=True)
+class RuntimeParams:
+    """Traced runtime scalars for one parameter point.
+
+    dt              () — the base timestep
+    dts             (S,) — dt * stride per species (host-precomputed)
+    qm_dts          (S,) — (charge/mass) * dt * stride per species
+    b_field         (3,) — uniform magnetic field vector
+    ionization_rate () — MC ionization coefficient
+    emission_yield  () — wall secondary-emission yield
+    collision_rates tuple of () — one rate per collision-menu entry (the
+                    menu *structure* — kinds, species pairs — stays static)
+    """
+    dt: Array
+    dts: Array
+    qm_dts: Array
+    b_field: Array
+    ionization_rate: Array
+    emission_yield: Array
+    collision_rates: tuple[Array, ...]
+
+    @classmethod
+    def from_config(cls, cfg, dtype=jnp.float32) -> "RuntimeParams":
+        """Extract the runtime point a config describes.
+
+        All products are formed in Python float64 before the single cast,
+        matching the static path's constant folding bit-for-bit.
+        """
+        dts = [float(cfg.dt) * sc.stride for sc in cfg.species]
+        qm_dts = [(sc.charge / sc.mass) * float(cfg.dt) * sc.stride
+                  for sc in cfg.species]
+        return cls(
+            dt=jnp.asarray(cfg.dt, dtype),
+            dts=jnp.asarray(dts, dtype),
+            qm_dts=jnp.asarray(qm_dts, dtype),
+            b_field=jnp.asarray(cfg.b_field, dtype),
+            ionization_rate=jnp.asarray(cfg.ionization_rate, dtype),
+            emission_yield=jnp.asarray(cfg.emission_yield, dtype),
+            collision_rates=tuple(jnp.asarray(cc.rate, dtype)
+                                  for cc in cfg.collisions))
+
+
+def runtime_params(cfg, dtype=jnp.float32, collision_rates=None,
+                   **overrides) -> RuntimeParams:
+    """Build a RuntimeParams for ``cfg`` with selected values overridden.
+
+    Only genuinely-runtime fields (``RUNTIME_FIELDS``) may be overridden —
+    asking for a different nc / strategy / menu structure is a compile-shape
+    change and must go through a new config. ``collision_rates`` replaces the
+    per-menu-entry coefficients (length must match the menu).
+    """
+    bad = sorted(set(overrides) - set(RUNTIME_FIELDS))
+    if bad:
+        raise ValueError(
+            f"not runtime parameters: {bad}; traced overrides are limited to "
+            f"{RUNTIME_FIELDS} (+ collision_rates). Static knobs (nc, "
+            f"capacities, strategy, menu structure, ...) need a new config "
+            f"and a fresh compile.")
+    cfg2 = dataclasses.replace(cfg, **overrides) if overrides else cfg
+    rp = RuntimeParams.from_config(cfg2, dtype)
+    if collision_rates is not None:
+        if len(collision_rates) != len(cfg.collisions):
+            raise ValueError(
+                f"collision_rates has {len(collision_rates)} entries for a "
+                f"{len(cfg.collisions)}-entry menu")
+        rp = dataclasses.replace(
+            rp, collision_rates=tuple(jnp.asarray(r, dtype)
+                                      for r in collision_rates))
+    return rp
+
+
+def b_active(cfg) -> bool:
+    """Static gate: does this config apply a magnetic rotation at all?
+
+    Zero-vs-nonzero b is *structure* (the rotation branch exists or not);
+    the field's value within the active branch is runtime.
+    """
+    return any(float(c) != 0.0 for c in cfg.b_field)

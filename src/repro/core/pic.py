@@ -33,6 +33,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import collisions, diagnostics, fields, mover
+from repro.core.params import RuntimeParams, b_active
 from repro.core.grid import Grid1D, deposit, deposit_stacked
 from repro.core.grid import deposit_windowed
 from repro.core.particles import (SpeciesBuffer, init_uniform, stack_species,
@@ -95,7 +96,16 @@ class PICConfig:
         object.__setattr__(self, "wall_emission",
                            tuple(tuple(p) for p in self.wall_emission))
         object.__setattr__(self, "collisions", tuple(self.collisions))
+        object.__setattr__(self, "b_field", tuple(self.b_field))
+        if self.ionization is not None:
+            object.__setattr__(self, "ionization", tuple(self.ionization))
         collisions.validate_menu(self.collisions, self.species)
+        over = [f"{sc.name} (n_init={sc.n_init} > capacity={sc.capacity})"
+                for sc in self.species if sc.n_init > sc.capacity]
+        if over:
+            raise ValueError(
+                "species initial population exceeds buffer capacity: "
+                + ", ".join(over))
         if self.strategy not in mover.STRATEGIES:
             raise ValueError(
                 f"unknown mover strategy {self.strategy!r}; valid strategies"
@@ -197,7 +207,16 @@ def compute_field(cfg: PICConfig, species: tuple[SpeciesBuffer, ...]) -> Array:
     return field_from_rho(cfg, compute_rho(cfg, species))
 
 
-def _push_all(state: PICState, cfg: PICConfig, e: Array):
+def _b_arg(cfg: PICConfig, rp: RuntimeParams | None, dtype):
+    """b for the push: traced array when params carry an active field,
+    the static tuple otherwise (zero b keeps the no-rotation program)."""
+    if rp is not None and b_active(cfg):
+        return rp.b_field.astype(dtype)
+    return cfg.b_field
+
+
+def _push_all(state: PICState, cfg: PICConfig, e: Array,
+              rp: RuntimeParams | None = None):
     """Push every species exactly once; returns (species list,
     per-species (hit_l, hit_r) masks, diag dict, fused rho | None)."""
     grid = cfg.grid
@@ -211,11 +230,13 @@ def _push_all(state: PICState, cfg: PICConfig, e: Array):
         st = stack_species(state.species)
         dtype = st.x.dtype
         qm = jnp.asarray([sc.charge / sc.mass for sc in cfg.species], dtype)
-        dts = jnp.asarray([cfg.dt * sc.stride for sc in cfg.species], dtype)
+        dts = (jnp.asarray([cfg.dt * sc.stride for sc in cfg.species], dtype)
+               if rp is None else rp.dts.astype(dtype))
         charges = (jnp.asarray([sc.charge for sc in cfg.species], dtype)
                    if carried else None)
         out, hl, hr, pdiag, new_rho = mover.push_stacked(
-            st, e, grid, qm, dts, b=cfg.b_field, boundary=cfg.boundary,
+            st, e, grid, qm, dts, b=_b_arg(cfg, rp, dtype),
+            boundary=cfg.boundary,
             gather_mode=cfg.gather_mode, charges=charges)
         strides = [sc.stride for sc in cfg.species]
         if any(s > 1 for s in strides):
@@ -238,11 +259,36 @@ def _push_all(state: PICState, cfg: PICConfig, e: Array):
 
     # ---- general path: per-species loop (explicit / async_batched, or
     #      heterogeneous capacities) ----
+    if rp is not None and cfg.strategy == "explicit":
+        raise NotImplementedError(
+            "strategy='explicit' routes through the Pallas mover kernel, "
+            "which bakes dt/qm as compile-time scalars; traced RuntimeParams "
+            "are not supported there — use 'unified' or 'fused'")
+    if rp is not None and cfg.strategy == "async_batched":
+        # the lax.scan batching loop is FMA-contraction-sensitive: XLA:CPU
+        # contracts mul+add inside the scan body when the kick scalar is a
+        # runtime value but not when it is a literal, so a traced step could
+        # not honor the bitwise static/traced contract (verified, 1-ulp v
+        # diffs). The engine's async path (async_n queues + push_stacked)
+        # computes qm*dt at runtime on BOTH paths and is parity-safe.
+        raise NotImplementedError(
+            "strategy='async_batched' cannot take traced RuntimeParams "
+            "bitwise-safely (lax.scan FMA contraction differs between "
+            "literal and traced kick scalars) — use 'unified' or 'fused'")
+    if (rp is not None and cfg.strategy == "fused"
+            and jax.default_backend() == "tpu" and not _stackable(cfg)):
+        raise NotImplementedError(
+            "strategy='fused' on TPU with heterogeneous capacities routes "
+            "through the fused Pallas kernel, which bakes dt/qm as "
+            "compile-time scalars; traced RuntimeParams are not supported "
+            "there")
     species = []
-    for sc, buf in zip(cfg.species, state.species):
+    for si, (sc, buf) in enumerate(zip(cfg.species, state.species)):
         qm = sc.charge / sc.mass
-        dt_s = cfg.dt * sc.stride
-        kw = dict(b=cfg.b_field, boundary=cfg.boundary)
+        dt_s = cfg.dt * sc.stride if rp is None else rp.dts[si]
+        kw = dict(b=_b_arg(cfg, rp, buf.x.dtype), boundary=cfg.boundary)
+        if rp is not None:
+            kw["qm_dt"] = rp.qm_dts[si]
         if cfg.strategy == "async_batched":
             kw["num_batches"] = cfg.num_batches
         if cfg.strategy != "explicit":
@@ -266,7 +312,13 @@ def _push_all(state: PICState, cfg: PICConfig, e: Array):
     return species, hits, diag, new_rho
 
 
-def step_fn(state: PICState, cfg: PICConfig) -> tuple[PICState, dict]:
+def step_fn(state: PICState, cfg: PICConfig,
+            params: RuntimeParams | None = None) -> tuple[PICState, dict]:
+    """One PIC cycle. ``params`` (optional) supplies the runtime scalars as
+    traced values; ``params=None`` keeps the classic static path where the
+    config's values are baked into the program as constants. Both paths are
+    bit-identical for equal values (see ``core/params.py``)."""
+    rp = params
     grid = cfg.grid
     carried = _carries_rho(cfg)
     if not cfg.field_solve:
@@ -277,7 +329,7 @@ def step_fn(state: PICState, cfg: PICConfig) -> tuple[PICState, dict]:
         e = compute_field(cfg, state.species)
 
     key = state.key
-    species, hits, diag, new_rho = _push_all(state, cfg, e)
+    species, hits, diag, new_rho = _push_all(state, cfg, e, rp)
 
     if cfg.collisions:
         # collide right after the push (the engine's per-queue order): rates
@@ -289,22 +341,25 @@ def step_fn(state: PICState, cfg: PICConfig) -> tuple[PICState, dict]:
                 for i in collisions.density_species(cfg.collisions)}
         bufs = {i: species[i]
                 for i in collisions.involved_species(cfg.collisions)}
-        bufs, cdiag = collisions.apply_menu(sub, bufs, cfg.collisions, dens,
-                                            grid, cfg.dt, cfg.collide_kernel)
+        bufs, cdiag = collisions.apply_menu(
+            sub, bufs, cfg.collisions, dens, grid,
+            cfg.dt if rp is None else rp.dt, cfg.collide_kernel,
+            rates=None if rp is None else rp.collision_rates)
         for i, b in bufs.items():
             species[i] = b
         diag.update(cdiag)
 
     if cfg.wall_emission and cfg.boundary == "absorb":
         from repro.core.boundaries import EmissionParams, wall_emission
-        params = EmissionParams(yield_=cfg.emission_yield,
-                                vth_emit=cfg.emission_vth,
-                                weight=cfg.emission_weight)
+        eparams = EmissionParams(
+            yield_=cfg.emission_yield if rp is None else rp.emission_yield,
+            vth_emit=cfg.emission_vth,
+            weight=cfg.emission_weight)
         for primary, target in cfg.wall_emission:
             key, sub = jax.random.split(key)
             hl, hr = hits[primary]
             species[target], d, erows = wall_emission(
-                sub, species[primary], hl, hr, species[target], params,
+                sub, species[primary], hl, hr, species[target], eparams,
                 cfg.length)
             q_t = cfg.species[target].charge
             if carried and new_rho is not None and q_t != 0.0:
@@ -317,10 +372,12 @@ def step_fn(state: PICState, cfg: PICConfig) -> tuple[PICState, dict]:
     if cfg.ionization is not None:
         ni, ei, ii = cfg.ionization
         key, sub = jax.random.split(key)
-        params = collisions.IonizationParams(
-            rate=cfg.ionization_rate, vth_electron=cfg.ionization_vth_e)
+        iparams = collisions.IonizationParams(
+            rate=cfg.ionization_rate if rp is None else rp.ionization_rate,
+            vth_electron=cfg.ionization_vth_e)
         neu, ele, ion, d, births = collisions.ionize(
-            sub, species[ni], species[ei], species[ii], grid, params, cfg.dt)
+            sub, species[ni], species[ei], species[ii], grid, iparams,
+            cfg.dt if rp is None else rp.dt)
         species[ni], species[ei], species[ii] = neu, ele, ion
         if carried and new_rho is not None:
             # one windowed scatter for both halves of every born pair; the
@@ -363,23 +420,32 @@ def step_fn(state: PICState, cfg: PICConfig) -> tuple[PICState, dict]:
 def make_step(cfg: PICConfig):
     """jit-compiled single step closing over the static config.
 
+    The returned function is ``step(state, params=None)``: pass a
+    ``RuntimeParams`` to trace the runtime scalars (one compile serves every
+    parameter point), omit it to bake the config's values as constants.
+
     The state argument is DONATED: XLA reuses the particle buffers in place
     instead of copying the full state every step, so the previous state is
     invalid after the call (rebind, as in ``state, d = step(state)``).
     """
-    return jax.jit(partial(step_fn, cfg=cfg), donate_argnums=0)
+    def step(state: PICState, params: RuntimeParams | None = None):
+        return step_fn(state, cfg, params)
+
+    return jax.jit(step, donate_argnums=0)
 
 
 @partial(jax.jit, static_argnames=("cfg", "steps"), donate_argnums=(0,))
-def _run_scan(state: PICState, cfg: PICConfig, steps: int):
+def _run_scan(state: PICState, cfg: PICConfig, steps: int,
+              params: RuntimeParams | None = None):
     def body(s, _):
-        return step_fn(s, cfg)
+        return step_fn(s, cfg, params)
 
     return jax.lax.scan(body, state, None, length=steps)
 
 
 def run(cfg: PICConfig, steps: int, seed: int = 0,
-        state: PICState | None = None) -> tuple[PICState, dict]:
+        state: PICState | None = None,
+        params: RuntimeParams | None = None) -> tuple[PICState, dict]:
     """Run `steps` steps under lax.scan; returns final state + stacked diag.
 
     The initial state is donated to the scan (see ``make_step``).
@@ -391,4 +457,4 @@ def run(cfg: PICConfig, steps: int, seed: int = 0,
         # rho so the scan carry keeps one pytree structure throughout
         state = dataclasses.replace(
             state, rho=compute_rho(cfg, state.species))
-    return _run_scan(state, cfg, steps)
+    return _run_scan(state, cfg, steps, params)

@@ -118,6 +118,7 @@ from repro.core.particles import (FreeSlotRing, SpeciesBuffer, StackedSpecies,
                                   kill, kill_packed, ring_claim,
                                   ring_from_counts, ring_init, ring_push,
                                   sort_by_cell, stack_species, take)
+from repro.core.params import RuntimeParams, b_active
 from repro.core.pic import PICConfig, PICState
 from repro.core.pic import _carries_rho as pic_carries_rho
 from repro.distributed import halo
@@ -609,7 +610,7 @@ def _lift(species, key, step, rho) -> PICState:
 
 
 def make_engine_step(ecfg: EngineConfig, mesh: Mesh, *, upto: str = "full",
-                     donate: bool = True):
+                     donate: bool = True, with_params: bool = False):
     """Build the shard_map'd async(n) PIC step.
 
     ``upto='full'`` (default) returns the production step: jit-compiled,
@@ -617,6 +618,12 @@ def make_engine_step(ecfg: EngineConfig, mesh: Mesh, *, upto: str = "full",
     build the perf probes (see ``PHASES``): the pipeline runs through that
     phase and returns ``(state, aux)`` undonated, so cumulative differencing
     yields per-phase times without instrumenting the hot path.
+
+    ``with_params=True`` returns ``(state, params) -> (state, diag)`` taking
+    a ``RuntimeParams`` pytree (replicated across domains) for the runtime
+    scalars — dt, source coefficients, collision rates, b — so every
+    parameter point of a sweep runs through ONE compiled step. Identical
+    values are bit-identical to the static build (see ``core/params.py``).
     """
     if upto not in PHASES:
         raise ValueError(f"upto must be one of {PHASES}, got {upto!r}")
@@ -660,7 +667,7 @@ def make_engine_step(ecfg: EngineConfig, mesh: Mesh, *, upto: str = "full",
                 f"the engine")
     axis_names = ecfg.axis_names
 
-    def local_step(estate: EngineState):
+    def local_step(estate: EngineState, rp: RuntimeParams | None = None):
         state = estate.pic
         species = [jax.tree.map(lambda a: a[0], b) for b in state.species]
         rings = [jax.tree.map(lambda a: a[0], r) for r in estate.rings]
@@ -674,7 +681,9 @@ def make_engine_step(ecfg: EngineConfig, mesh: Mesh, *, upto: str = "full",
             scs = [cfg.species[i] for i in idxs]
             dtype = species[idxs[0]].x.dtype
             qm = jnp.asarray([sc.charge / sc.mass for sc in scs], dtype)
-            dts = jnp.asarray([cfg.dt * sc.stride for sc in scs], dtype)
+            dts = (jnp.asarray([cfg.dt * sc.stride for sc in scs], dtype)
+                   if rp is None
+                   else rp.dts[jnp.asarray(list(idxs))].astype(dtype))
             charges = jnp.asarray([sc.charge for sc in scs], dtype)
             return scs, qm, dts, charges
 
@@ -783,14 +792,17 @@ def make_engine_step(ecfg: EngineConfig, mesh: Mesh, *, upto: str = "full",
         with tracing.phase_scope("engine/sources"):
             if ion is not None:
                 iparams = collisions.IonizationParams(
-                    rate=cfg.ionization_rate,
+                    rate=(cfg.ionization_rate if rp is None
+                          else rp.ionization_rate),
                     vth_electron=cfg.ionization_vth_e)
                 ne_local = halo.halo_sum(
                     deposit_density(grid_local, species[ion[1]]),
                     axis_names, mesh, is_first, is_last)
             if see_pairs:
                 eparams = boundaries.EmissionParams(
-                    yield_=cfg.emission_yield, vth_emit=cfg.emission_vth,
+                    yield_=(cfg.emission_yield if rp is None
+                            else rp.emission_yield),
+                    vth_emit=cfg.emission_vth,
                     weight=cfg.emission_weight)
             if has_mc:
                 key, k_mc = jax.random.split(key)
@@ -831,7 +843,10 @@ def make_engine_step(ecfg: EngineConfig, mesh: Mesh, *, upto: str = "full",
             for k_q, q in enumerate(_split_queues(st, n_q)):
                 with tracing.phase_scope(f"engine/push/q{k_q}"):
                     out, hl, hr, pdiag, rho_push = mover.push_stacked(
-                        q, e, grid_local, qm, dts, b=cfg.b_field,
+                        q, e, grid_local, qm, dts,
+                        b=(rp.b_field.astype(dtype)
+                           if rp is not None and b_active(cfg)
+                           else cfg.b_field),
                         boundary="open", gather_mode=cfg.gather_mode,
                         charges=charges if carried else None,
                         rho_carry=rho_acc if carried else None)
@@ -860,7 +875,9 @@ def make_engine_step(ecfg: EngineConfig, mesh: Mesh, *, upto: str = "full",
                 #      single-domain cycle uses. Collisions touch only
                 #      velocities — no alive-mask change, hence no ring
                 #      traffic and no carried-rho correction ----
-                g_coll = [cc for cc in coll if loc[cc.species][0] == g]
+                g_pairs = [(k_m, cc) for k_m, cc in enumerate(coll)
+                           if loc[cc.species][0] == g]
+                g_coll = [cc for _, cc in g_pairs]
                 if g_coll:
                     with tracing.phase_scope(f"engine/collide/q{k_q}"):
                         rows_c = collisions.involved_species(g_coll)
@@ -871,8 +888,12 @@ def make_engine_step(ecfg: EngineConfig, mesh: Mesh, *, upto: str = "full",
                             for i in rows_c}
                         cbufs, cdiag = collisions.apply_menu(
                             jax.random.fold_in(coll_keys[k_q], g), cbufs,
-                            g_coll, coll_dens, grid_local, cfg.dt,
-                            cfg.collide_kernel)
+                            g_coll, coll_dens, grid_local,
+                            cfg.dt if rp is None else rp.dt,
+                            cfg.collide_kernel,
+                            rates=(None if rp is None else tuple(
+                                rp.collision_rates[k_m]
+                                for k_m, _ in g_pairs)))
                         for i, cb in cbufs.items():
                             j = idxs.index(i)
                             out = StackedSpecies(
@@ -895,7 +916,8 @@ def make_engine_step(ecfg: EngineConfig, mesh: Mesh, *, upto: str = "full",
                         qn = SpeciesBuffer(x=out.x[jn], v=out.v[jn],
                                            w=out.w[jn], alive=out.alive[jn])
                         pack = collisions.ionize_packed(
-                            ion_keys[k_q], qn, grid_local, iparams, cfg.dt,
+                            ion_keys[k_q], qn, grid_local, iparams,
+                            cfg.dt if rp is None else rp.dt,
                             ne_local, b_q)
                         (ge, je), (gi, ji) = loc[ei], loc[ii]
                         if use_ring:
@@ -1124,10 +1146,20 @@ def make_engine_step(ecfg: EngineConfig, mesh: Mesh, *, upto: str = "full",
     specs_state = _state_specs(ecfg, mesh)
     out_specs = ((specs_state, P()) if upto == "full"
                  else (specs_state, P(axis_names)))
-    step = halo.shard_map(
-        local_step, mesh=mesh, in_specs=(specs_state,), out_specs=out_specs,
-        check_vma=False)
     donate_kw = {"donate_argnums": (0,)} if (donate and upto == "full") else {}
+    if with_params:
+        # runtime params ride replicated (P() on every leaf): each domain
+        # reads the same scalars, nothing is ever sharded or donated
+        rp_specs = jax.tree.map(lambda _: P(),
+                                RuntimeParams.from_config(cfg))
+        step = halo.shard_map(
+            local_step, mesh=mesh, in_specs=(specs_state, rp_specs),
+            out_specs=out_specs, check_vma=False)
+        return jax.jit(step, **donate_kw)
+    step = halo.shard_map(
+        lambda estate: local_step(estate), mesh=mesh,
+        in_specs=(specs_state,), out_specs=out_specs,
+        check_vma=False)
     return jax.jit(step, **donate_kw)
 
 

@@ -36,6 +36,13 @@ the engine knobs (async_n, migration/birth budgets, rebalance triggers)
 from the measured stream between steps. The last two force the engine
 path even at --domains 1.
 
+Serving (``repro.serve``): --ensemble W runs the simulation-as-a-service
+demo instead of a single run — a width-W vmapped ensemble server over ONE
+compiled step, fed 2*W queued sessions on a dt x ionization-rate grid
+(slot reuse as sessions finish). Prints each session's final diagnostics
+and the server stats; ``compiles`` staying at 1 across all sessions is the
+point. Single device, --strategy unified|fused only.
+
 Resilience (``repro.runtime.resilience``): --ckpt-dir DIR checkpoints the
 full EngineState asynchronously every --ckpt-every steps; --resume restarts
 from the newest complete checkpoint (bitwise when --domains matches the
@@ -99,6 +106,10 @@ def main() -> None:
     ap.add_argument("--autotune", action="store_true",
                     help="retune the engine knobs online from the metrics "
                          "stream (engine path)")
+    ap.add_argument("--ensemble", type=int, default=0, metavar="W",
+                    help="serve a width-W parameter sweep through the "
+                         "vmapped ensemble engine instead of one run "
+                         "(simulation-as-a-service demo; single device)")
     ap.add_argument("--ckpt-dir", default="",
                     help="checkpoint EngineState into this directory "
                          "(async write; engine path)")
@@ -118,6 +129,11 @@ def main() -> None:
     if args.autotune and resilient:
         ap.error("--autotune cannot be combined with the checkpoint flags "
                  "(the knob retunes would change the state pytree mid-run)")
+    if args.ensemble and (args.domains > 1 or args.async_n > 1 or resilient
+                          or args.autotune):
+        ap.error("--ensemble is the single-device serving demo; it excludes "
+                 "--domains/--async-n > 1, the checkpoint flags and "
+                 "--autotune")
 
     if args.domains > 1:
         # must happen before jax initializes; a no-op when XLA_FLAGS is
@@ -153,6 +169,33 @@ def main() -> None:
         menu = tuple(m for m in args.collisions.split(",") if m)
         cfg = dataclasses.replace(cfg,
                                   collisions=make_collision_menu(menu))
+    if args.ensemble:
+        from repro.serve import SimService
+
+        svc = SimService(cfg, width=args.ensemble)
+        t0 = time.perf_counter()
+        sids = []
+        for i in range(2 * args.ensemble):
+            # a small dt x ionization-rate grid: every session is its own
+            # parameter point, all through ONE compiled vmapped step
+            sids.append(svc.submit(
+                {"dt": cfg.dt * (1.0 + 0.1 * (i % args.ensemble)),
+                 "ionization_rate": cfg.ionization_rate * (1 + i)},
+                seed=i, steps=args.steps))
+        svc.run_until_drained()
+        wall = time.perf_counter() - t0
+        for sid in sids:
+            p = svc.poll(sid)
+            kes = {k: float(np.asarray(v).sum()) for k, v in p["diag"].items()
+                   if k.endswith("/ke")}
+            print(f"session {sid}: slot={p['slot']} "
+                  f"steps={p['steps_done']} ke={kes}")
+        st = svc.stats()
+        print(f"{len(sids)} sessions x {args.steps} steps, width="
+              f"{args.ensemble}: {wall:.2f}s — stats {st}")
+        assert st["compiles"] == 1, st
+        return
+
     from repro.obs import MetricsStream, tracing
 
     want_stream = bool(args.metrics_jsonl or args.autotune)

@@ -27,6 +27,7 @@ labeled k+1), and ``EngineState.pic.step`` carries the same value, so
 
 from __future__ import annotations
 
+import signal
 import time
 from typing import Any
 
@@ -94,11 +95,21 @@ def run_engine(ecfg: engine.EngineConfig, mesh: Mesh,
                ckpt: Checkpointer | None = None, ckpt_every: int = 0,
                injector: FailureInjector | None = None,
                stream: MetricsStream | None = None,
-               step_fn: Any = None, collect: bool = True
+               step_fn: Any = None, collect: bool = True,
+               handle_sigterm: bool = True
                ) -> tuple[engine.EngineState, list[dict]]:
     """Drive engine steps from ``state.pic.step`` to ``num_steps`` with
     periodic async checkpoints; raises ``SimulatedFailure`` at the
     injector's fence AFTER any due checkpoint (a crash between fences).
+
+    SIGTERM (the preemption signal cluster schedulers send before a kill)
+    is handled cooperatively when ``handle_sigterm``: the handler only sets
+    a flag, the loop notices it at the next step boundary, stops, and — if
+    a checkpointer is attached — writes one final BLOCKING checkpoint
+    labeled with the next step to run, so ``resume_engine`` restarts the
+    preempted run bitwise. The previous handler is restored on exit, and
+    installation is skipped off the main thread (``signal.signal`` raises
+    there).
 
     Returns ``(state, diags)`` — one (host) diag dict per executed step
     when ``collect`` (the bitwise-restart tests compare these too).
@@ -107,16 +118,34 @@ def run_engine(ecfg: engine.EngineConfig, mesh: Mesh,
         step_fn = engine.make_engine_step(ecfg, mesh)
     start = int(np.asarray(jax.device_get(state.pic.step)))
     diags: list[dict] = []
+    stop = {"seen": False}
+    prev_handler: Any = None
+    installed = False
+    if handle_sigterm:
+        def _on_term(signum, frame):
+            stop["seen"] = True
+
+        try:
+            prev_handler = signal.signal(signal.SIGTERM, _on_term)
+            installed = True
+        except ValueError:  # not the main thread; run unprotected
+            pass
+    done_through = start  # steps completed; label of the next step to run
+    last_saved = None
     try:
         for step in range(start, num_steps):
+            if stop["seen"]:
+                break
             if injector is not None:
                 injector.check(step)
             t0 = time.perf_counter()
             state, diag = step_fn(state)
+            done_through = step + 1
             extra = None
             if ckpt is not None and ckpt_every > 0 \
                     and (step + 1) % ckpt_every == 0:
                 info = save_engine(ckpt, ecfg, mesh, step + 1, state)
+                last_saved = step + 1
                 extra = {"ckpt/bytes": float(info["bytes"]),
                          "ckpt/fetch_us": float(info["fetch_us"]),
                          "ckpt/write_us": float(ckpt.last_write_us)}
@@ -126,7 +155,11 @@ def run_engine(ecfg: engine.EngineConfig, mesh: Mesh,
                 diags.append(diag)
             if stream is not None:
                 stream.record(diag, wall_us=wall_us, step=step, extra=extra)
+        if stop["seen"] and ckpt is not None and last_saved != done_through:
+            save_engine(ckpt, ecfg, mesh, done_through, state, blocking=True)
     finally:
+        if installed:
+            signal.signal(signal.SIGTERM, prev_handler)
         # flush the in-flight write even when the injector fence fires: the
         # drill simulates a crash *between* fences, after durable I/O — the
         # truly-torn-write case is covered by the Checkpointer's

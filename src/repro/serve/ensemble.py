@@ -1,0 +1,158 @@
+"""Ensemble engine: one jaxpr stepping W independent parameter points.
+
+The prerequisite is the static/traced config split (``core/params.py``):
+every member shares the SAME static config — shapes, capacities, strategy,
+menu structure — and differs only in its ``RuntimeParams`` (dt, rates,
+yields, b). ``jax.vmap`` over the member axis then turns the single-domain
+``pic.step_fn`` into a batched step, and jit compiles it ONCE for the whole
+sweep: a million parameter points cost one compile.
+
+Members live in fixed slots (the serving layer reuses them as sessions
+finish — see ``service.py``):
+
+* ``init_ensemble``     — W all-inactive zero members
+* ``make_member_init``  — seed -> fresh member state, seed TRACED (one
+                          compile serves every seed)
+* ``make_member_insert``— write a member + params into slot s, slot TRACED
+* ``make_ensemble_step``— advance all members; inactive slots are frozen
+                          bitwise and report zero diagnostics
+
+The freeze makes slot contents stable while a slot is parked: an inactive
+slot's arrays pass through the step bitwise-unchanged. An ACTIVE member
+stepped alongside arbitrary neighbors takes exactly the same event
+decisions as the same member run alone — identical RNG keys, particle
+counts, collision/ionization/emission outcomes — but its float leaves are
+only numerically equivalent, not bitwise: batching changes how XLA orders
+and contracts float accumulation (pinned by ``tests/test_ensemble.py``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pic
+from repro.core.params import RuntimeParams
+
+Array = jax.Array
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("pic", "params", "active"), meta_fields=())
+@dataclasses.dataclass
+class EnsembleState:
+    """W stacked members: every leaf of ``pic``/``params`` carries a leading
+    member axis; ``active`` (W,) bool masks the live slots."""
+    pic: pic.PICState
+    params: RuntimeParams
+    active: Array
+
+    @property
+    def width(self) -> int:
+        return self.active.shape[0]
+
+
+def _check_cfg(cfg: pic.PICConfig) -> None:
+    if cfg.strategy in ("explicit", "async_batched"):
+        raise NotImplementedError(
+            f"strategy={cfg.strategy!r} does not support traced "
+            f"RuntimeParams (see core/pic.py) — the ensemble engine needs "
+            f"'unified' or 'fused'")
+
+
+def init_ensemble(cfg: pic.PICConfig, width: int) -> EnsembleState:
+    """W all-inactive zero members (no compile, no RNG — pure zeros)."""
+    _check_cfg(cfg)
+    if width < 1:
+        raise ValueError(f"ensemble width must be >= 1, got {width}")
+
+    def widen(leaf):
+        return jnp.zeros((width,) + leaf.shape, leaf.dtype)
+
+    st_shape = jax.eval_shape(lambda: pic.init_state(cfg, 0))
+    rp_shape = jax.eval_shape(lambda: RuntimeParams.from_config(cfg))
+    return EnsembleState(
+        pic=jax.tree.map(widen, st_shape),
+        params=jax.tree.map(widen, rp_shape),
+        active=jnp.zeros((width,), jnp.bool_))
+
+
+def make_member_init(cfg: pic.PICConfig):
+    """jit'd ``seed -> PICState`` with the seed TRACED: submitting a new
+    session never recompiles, whatever its seed."""
+    _check_cfg(cfg)
+
+    def init(seed: Array) -> pic.PICState:
+        return pic.init_state(cfg, seed)
+
+    return jax.jit(init)
+
+
+def make_member_insert(cfg: pic.PICConfig):
+    """jit'd ``(es, member, params, slot) -> es`` writing one member into a
+    TRACED slot index (one compile serves every slot) and marking it active.
+    The ensemble state is donated — the insert is an in-place slot write.
+    """
+    _check_cfg(cfg)
+
+    def insert(es: EnsembleState, member: pic.PICState,
+               params: RuntimeParams, slot: Array) -> EnsembleState:
+        def put(full, one):
+            return jax.lax.dynamic_update_index_in_dim(full, one, slot, 0)
+
+        return EnsembleState(
+            pic=jax.tree.map(put, es.pic, member),
+            params=jax.tree.map(put, es.params, params),
+            active=es.active.at[slot].set(True))
+
+    return jax.jit(insert, donate_argnums=0)
+
+
+def make_member_release(cfg: pic.PICConfig):
+    """jit'd ``(es, slot) -> es`` parking a slot (TRACED index, donated
+    state). The slot's arrays are left in place — frozen by the step mask —
+    and overwritten by the next insert."""
+    _check_cfg(cfg)
+
+    def release(es: EnsembleState, slot: Array) -> EnsembleState:
+        return dataclasses.replace(es, active=es.active.at[slot].set(False))
+
+    return jax.jit(release, donate_argnums=0)
+
+
+def member_view(es: EnsembleState, slot: int) -> pic.PICState:
+    """Host-side view of one member's PIC state (slice of every leaf)."""
+    return jax.tree.map(lambda a: a[slot], es.pic)
+
+
+def make_ensemble_step(cfg: pic.PICConfig, donate: bool = True):
+    """jit'd ``es -> (es, diag)`` advancing every member one PIC cycle.
+
+    One vmap of ``pic.step_fn`` over the member axis; each member reads its
+    own ``RuntimeParams`` row. Inactive slots are frozen bitwise (their
+    arrays pass through unchanged) and report zero diagnostics. The state
+    is donated, as in ``pic.make_step``.
+    """
+    _check_cfg(cfg)
+
+    def step(es: EnsembleState):
+        new_pic, diag = jax.vmap(
+            lambda s, p: pic.step_fn(s, cfg, p))(es.pic, es.params)
+
+        def freeze(new, old):
+            sel = es.active.reshape((-1,) + (1,) * (new.ndim - 1))
+            return jnp.where(sel, new, old)
+
+        out = EnsembleState(
+            pic=jax.tree.map(freeze, new_pic, es.pic),
+            params=es.params,
+            active=es.active)
+        diag = {k: jnp.where(
+            es.active.reshape((-1,) + (1,) * (jnp.ndim(v) - 1)),
+            v, jnp.zeros_like(v)) for k, v in diag.items()}
+        return out, diag
+
+    return jax.jit(step, donate_argnums=0) if donate else jax.jit(step)

@@ -99,6 +99,46 @@ def test_structure_rejects_broken_checkpoint_records():
     assert any("ckpt_bytes" in e for e in errs), errs
 
 
+def _ens_domain(total=2000.0, width=4):
+    return {"total": total, "width": width,
+            "members_per_sec": width / (total / 1e6), "compiles": 1}
+
+
+def test_structure_accepts_ensemble_scenario():
+    """The ensemble scenario's records are keyed by member WIDTH and carry
+    {total, width, members_per_sec, compiles} — no phase table."""
+    p = _payload()
+    p["scenarios"]["ensemble"] = {
+        "config": {"nc": 512}, "domains": {
+            "1": _ens_domain(800.0, 1), "4": _ens_domain(2000.0, 4)}}
+    assert check_perf.check_scaling_structure(p) == []
+
+
+def test_structure_rejects_broken_ensemble_records():
+    """compiles != 1 is a structural FAILURE, not a slowdown: the serving
+    contract is one executable for every parameter point."""
+    p = _payload()
+    bad = _ens_domain()
+    bad["compiles"] = 2
+    bad["members_per_sec"] = 0.0
+    bad["width"] = "4"
+    p["scenarios"]["ensemble"] = {"domains": {"4": bad}}
+    errs = check_perf.check_scaling_structure(p)
+    assert any("compiles" in e and "exactly once" in e for e in errs), errs
+    assert any("members_per_sec" in e for e in errs), errs
+    assert any("width" in e for e in errs), errs
+
+
+def test_compare_includes_ensemble_totals():
+    base = _payload()
+    base["scenarios"]["ensemble"] = {"domains": {"4": _ens_domain()}}
+    slow = copy.deepcopy(base)
+    slow["scenarios"]["ensemble"]["domains"]["4"] = _ens_domain(
+        total=2000.0 * 20)
+    errs = check_perf.compare_scaling(base, slow, tolerance=8.0)
+    assert len(errs) == 1 and "ensemble" in errs[0], errs
+
+
 def test_compare_includes_checkpoint_totals():
     base = _payload()
     base["scenarios"]["checkpoint"] = {"domains": {"1": _ckpt_domain()}}

@@ -1,0 +1,139 @@
+"""Ensemble engine (``serve/ensemble.py``): one vmapped jaxpr stepping W
+independent parameter points.
+
+The contract pinned here, in decreasing strength:
+
+* **exact events** — a member stepped inside an ensemble takes exactly the
+  same Monte-Carlo decisions as the same member run alone: RNG keys,
+  particle counts, alive masks and every integer diagnostic (collision
+  tallies, ionization births, emission counts) are bitwise-equal. Float
+  leaves are numerically equivalent but NOT bitwise (batching reorders and
+  re-contracts XLA's float accumulation) — that is the honest boundary of
+  the vmap transform, and this test would catch any regression past it;
+* **frozen slots** — an inactive slot's arrays pass through the step
+  bitwise-unchanged and report zero diagnostics;
+* **compile-once** — heterogeneous members (different dt / rates / yields /
+  b per slot) and every slot/seed flow through ONE executable per function
+  (step, member-init, insert, release).
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import pic_bit1
+from repro.core import pic
+from repro.core.params import runtime_params
+from repro.serve import ensemble
+
+
+def _cfg(strategy="fused", nc=64, n=256):
+    cfg = pic_bit1.make_resilience_config(nc=nc, n=n, strategy=strategy)
+    return dataclasses.replace(cfg, b_field=(0.0, 0.0, 0.02))
+
+
+def _split_leaves(tree):
+    """(exact, approx) leaf lists: ints/bools/uints carry the MC decisions
+    and must match bitwise; floats only numerically under vmap."""
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    exact = [(k, v) for k, v in leaves if np.asarray(v).dtype.kind in "iub"]
+    approx = [(k, v) for k, v in leaves if np.asarray(v).dtype.kind == "f"]
+    assert len(exact) + len(approx) == len(leaves)
+    return exact, approx
+
+
+def test_member_matches_solo_run():
+    cfg = _cfg()
+    rp0 = runtime_params(cfg, dt=0.4, ionization_rate=2e-3)
+    rp1 = runtime_params(cfg, dt=0.6, emission_yield=0.3)
+
+    es = ensemble.init_ensemble(cfg, 2)
+    mk = ensemble.make_member_init(cfg)
+    ins = ensemble.make_member_insert(cfg)
+    es = ins(es, mk(jnp.int32(10)), rp0, jnp.int32(0))
+    es = ins(es, mk(jnp.int32(3)), rp1, jnp.int32(1))
+    step = ensemble.make_ensemble_step(cfg)
+    ediags = []
+    for _ in range(4):
+        es, d = step(es)
+        ediags.append(d)
+
+    solo = pic.init_state(cfg, 10)
+    solo_step = pic.make_step(cfg)
+    sdiags = []
+    for _ in range(4):
+        solo, d = solo_step(solo, rp0)
+        sdiags.append(d)
+
+    mv = ensemble.member_view(es, 0)
+    ex_m, ap_m = _split_leaves(mv)
+    ex_s, ap_s = _split_leaves(solo)
+    for (kp, a), (_, b) in zip(ex_m, ex_s):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), \
+            f"event-carrying leaf diverged: {jax.tree_util.keystr(kp)}"
+    for (kp, a), (_, b) in zip(ap_m, ap_s):
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), rtol=1e-2, atol=1e-2,
+            err_msg=f"float leaf {jax.tree_util.keystr(kp)}")
+    # integer diagnostics (counts, tallies) are exact every step too
+    for ed, sd in zip(ediags, sdiags):
+        for k in sd:
+            a, b = np.asarray(ed[k])[0], np.asarray(sd[k])
+            if a.dtype.kind in "iub":
+                assert np.array_equal(a, b), f"diag {k}"
+
+
+def test_inactive_slot_frozen_bitwise():
+    cfg = _cfg(n=128)
+    rp = runtime_params(cfg)
+    es = ensemble.init_ensemble(cfg, 2)
+    mk = ensemble.make_member_init(cfg)
+    ins = ensemble.make_member_insert(cfg)
+    rel = ensemble.make_member_release(cfg)
+    es = ins(es, mk(jnp.int32(0)), rp, jnp.int32(0))
+    es = ins(es, mk(jnp.int32(1)), rp, jnp.int32(1))
+    es = rel(es, jnp.int32(1))
+    before = jax.tree.map(lambda a: np.asarray(a[1]).copy(), es.pic)
+    step = ensemble.make_ensemble_step(cfg)
+    for _ in range(3):
+        es, diag = step(es)
+    after = jax.tree.map(lambda a: np.asarray(a[1]), es.pic)
+    for (kp, a), (_, b) in zip(
+            jax.tree_util.tree_flatten_with_path(before)[0],
+            jax.tree_util.tree_flatten_with_path(after)[0]):
+        assert np.array_equal(a, b), \
+            f"parked slot mutated: {jax.tree_util.keystr(kp)}"
+    for k, v in diag.items():
+        assert not np.asarray(v)[1].any(), f"parked slot reported diag {k}"
+    # slot 0 kept evolving
+    assert int(np.asarray(es.pic.step)[0]) == 3
+
+
+def test_compile_once_across_members_slots_seeds():
+    cfg = _cfg(n=128)
+    es = ensemble.init_ensemble(cfg, 3)
+    mk = ensemble.make_member_init(cfg)
+    ins = ensemble.make_member_insert(cfg)
+    rel = ensemble.make_member_release(cfg)
+    step = ensemble.make_ensemble_step(cfg)
+    for slot, (seed, dt) in enumerate(((7, 0.3), (11, 0.5), (13, 0.7))):
+        es = ins(es, mk(jnp.int32(seed)), runtime_params(cfg, dt=dt),
+                 jnp.int32(slot))
+    es, _ = step(es)
+    es = rel(es, jnp.int32(1))
+    es, _ = step(es)
+    for fn in (mk, ins, rel, step):
+        assert fn._cache_size() == 1
+
+
+def test_width_and_strategy_validation():
+    cfg = _cfg(n=128)
+    with pytest.raises(ValueError, match="width"):
+        ensemble.init_ensemble(cfg, 0)
+    bad = dataclasses.replace(cfg, strategy="async_batched")
+    with pytest.raises(NotImplementedError, match="async_batched"):
+        ensemble.init_ensemble(bad, 2)

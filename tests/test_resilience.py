@@ -585,3 +585,72 @@ def test_ckpt_overhead_lands_in_metrics_stream():
             assert "ckpt/write_us" in s["counters"]
         assert all("ckpt/bytes" not in s["counters"]
                    for s in steps if s["step"] in (0, 2))
+
+
+# ------------------------------------------------------ SIGTERM handling
+
+
+def test_sigterm_stops_loop_and_writes_final_checkpoint():
+    """Preemption drill: SIGTERM mid-run must stop the loop at the next
+    step boundary and leave one final checkpoint labeled with the next
+    step to run, so ``resume_engine`` restarts the preempted run bitwise.
+    The previous handler is reinstalled afterwards."""
+    import signal
+
+    ecfg = _ecfg(async_n=2)
+    mesh = make_debug_mesh(data=1, model=1)
+    step = engine.make_engine_step(ecfg, mesh)
+    calls = {"n": 0}
+
+    def wrapped(s):
+        calls["n"] += 1
+        if calls["n"] == 3:       # delivered mid-step-3; loop stops before 4
+            signal.raise_signal(signal.SIGTERM)
+        return step(s)
+
+    before = signal.getsignal(signal.SIGTERM)
+    with tempfile.TemporaryDirectory() as tmp:
+        ck = Checkpointer(tmp)
+        fin, diags = resilience.run_engine(
+            ecfg, mesh, engine.init_engine_state(ecfg, mesh, 0),
+            num_steps=8, ckpt=ck, step_fn=wrapped)
+        assert len(diags) == 3          # steps 0..2 ran, 3.. preempted
+        assert signal.getsignal(signal.SIGTERM) is before
+        step_r, restored = resilience.resume_engine(ecfg, mesh, ck)
+        assert step_r == 3              # labeled with the next step to run
+        _assert_states_bitwise(restored, fin, "sigterm final ckpt")
+        # the resumed run completes and matches an uninterrupted one
+        fin_r, diags_r = resilience.run_engine(
+            ecfg, mesh, restored, num_steps=5, step_fn=step)
+        ref, ref_diags = resilience.run_engine(
+            ecfg, mesh, engine.init_engine_state(ecfg, mesh, 0),
+            num_steps=5, step_fn=step)
+        _assert_states_bitwise(fin_r, ref, "sigterm resume")
+        _assert_diags_bitwise(diags_r, ref_diags[3:], "sigterm resume")
+
+
+def test_sigterm_no_duplicate_checkpoint_when_boundary_already_saved():
+    """A SIGTERM landing right after a periodic checkpoint must not write
+    the same step twice — the final save is skipped when the boundary is
+    already durable."""
+    import signal
+
+    ecfg = _ecfg(async_n=1)
+    mesh = make_debug_mesh(data=1, model=1)
+    step = engine.make_engine_step(ecfg, mesh)
+    calls = {"n": 0}
+
+    def wrapped(s):
+        calls["n"] += 1
+        if calls["n"] == 2:
+            signal.raise_signal(signal.SIGTERM)
+        return step(s)
+
+    with tempfile.TemporaryDirectory() as tmp:
+        ck = Checkpointer(tmp)
+        resilience.run_engine(
+            ecfg, mesh, engine.init_engine_state(ecfg, mesh, 0),
+            num_steps=8, ckpt=ck, ckpt_every=2, step_fn=wrapped)
+        steps = sorted(int(d.name.split("_")[-1])
+                       for d in os.scandir(tmp) if d.is_dir())
+        assert steps == [2]
